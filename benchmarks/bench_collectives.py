@@ -1,0 +1,85 @@
+"""Framework-level communication benchmark: bytes on the wire per training
+step for CHOCO vs plain gossip vs centralized all-reduce.
+
+Two views:
+  * analytic — from the compressors' wire formats (exact, any size);
+  * compiled — parsed from the SPMD HLO of the real train step on a small
+    simulated mesh (subprocess with 8 host devices, since benches themselves
+    must see 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core import TopK, RandK, QSGD, Identity
+from .common import emit
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def analytic():
+    d = 2_030_000_000          # qwen3-1.7b-scale parameter vector
+    for name, comp in (("exact", Identity()),
+                       ("qsgd16", QSGD(16)),
+                       ("rand1pct", RandK(fraction=0.01)),
+                       ("top1pct", TopK(fraction=0.01))):
+        gb = comp.wire_bits(d) / 8 / 1e9 * 2        # 2 ring neighbours
+        emit(f"collectives/analytic_{name}", 0.0,
+             f"GB_per_node_per_step={gb:.3f};reduction={Identity().wire_bits(d)/comp.wire_bits(d):.0f}x")
+
+
+def compiled():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp
+        from repro.configs.base import get_config, ChocoConfig, InputShape
+        from repro.models import build_model
+        from repro.train.trainer import DecentralizedTrainer
+        from repro.optim import sgd, constant_schedule
+        from repro.launch.specs import train_batch_specs
+        from repro.analysis.roofline import parse_collectives
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg = get_config("qwen3-1.7b", smoke=True)
+        m = build_model(cfg)
+        out = {}
+        for mode in ("choco", "plain", "allreduce"):
+            tr = DecentralizedTrainer(model=m, choco=ChocoConfig(
+                    compressor="top_k", comp_kwargs=(("fraction", 0.01),)),
+                mesh=mesh, n_nodes=4, optimizer=sgd(),
+                lr_fn=constant_schedule(0.01), mode=mode)
+            ss = tr.state_shape()
+            bs = train_batch_specs(cfg, InputShape("b", 128, 16, "train"), 4)
+            comp = tr.jitted_train_step(ss, bs).lower(ss, bs).compile()
+            st = parse_collectives(comp.as_text(), 8)
+            out[mode] = {"wire_bytes": st.total_wire_bytes,
+                         "permute_bytes": st.wire_bytes["collective-permute"],
+                         "allreduce_bytes": st.wire_bytes["all-reduce"]}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    if r.returncode != 0:
+        emit("collectives/compiled", 0.0, f"ERROR:{r.stderr[-200:]}")
+        return
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    base = out["plain"]["permute_bytes"] or 1.0
+    for mode, v in out.items():
+        emit(f"collectives/compiled_{mode}", 0.0,
+             f"wire_bytes={v['wire_bytes']:.3e};permute={v['permute_bytes']:.3e};"
+             f"vs_plain_permute={v['permute_bytes']/base:.4f}")
+
+
+def run():
+    analytic()
+    compiled()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Figures 2-3: average consensus on ring n=25, d=2000.
+
+Schemes: exact gossip (E-G), Q1-G, Q2-G (unbiased qsgd), CHOCO-Gossip with
+qsgd_256 / rand_1% / top_1%.  Derived column: final consensus error and total
+transmitted megabits (the paper's two x-axes)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ring, QSGD, RandK, TopK, Identity,
+                        run_choco_gossip, run_gossip_baseline)
+from .common import time_fn, emit
+
+N, D = 25, 2000
+STEPS = 300
+
+
+def _bits_per_round(comp, n=N, d=D, degree=2):
+    # every node sends its payload to each neighbour per round
+    return comp.wire_bits(d) * n * degree
+
+
+def run():
+    topo = ring(N)
+    W = jnp.asarray(topo.W)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+
+    def bench(name, fn, comp, steps=STEPS):
+        us = time_fn(fn, iters=2) / steps
+        _, errs = fn()
+        bits = _bits_per_round(comp) * steps / 1e6
+        emit(f"consensus/{name}", us,
+             f"err0={float(errs[0]):.3e};err@{steps}={float(errs[-1]):.3e};"
+             f"Mbits={bits:.1f}")
+
+    bench("exact_EG",
+          lambda: run_gossip_baseline("exact", x0, W, None, STEPS),
+          Identity())
+    bench("Q1_qsgd256",
+          lambda: run_gossip_baseline("q1", x0, W, QSGD(256, rescale=False),
+                                      STEPS, key=jax.random.PRNGKey(1)),
+          QSGD(256))
+    bench("Q2_qsgd256",
+          lambda: run_gossip_baseline("q2", x0, W, QSGD(256, rescale=False),
+                                      STEPS, key=jax.random.PRNGKey(1)),
+          QSGD(256))
+    bench("choco_qsgd256",
+          lambda: run_choco_gossip(x0, W, 1.0, QSGD(256), STEPS),
+          QSGD(256))
+    bench("choco_rand1pct",
+          lambda: run_choco_gossip(x0, W, 0.011, RandK(fraction=0.01), 1500),
+          RandK(fraction=0.01), steps=1500)
+    bench("choco_top1pct",
+          lambda: run_choco_gossip(x0, W, 0.046, TopK(fraction=0.01), 3000),
+          TopK(fraction=0.01), steps=3000)
+
+
+if __name__ == "__main__":
+    run()

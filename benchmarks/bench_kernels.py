@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks.
+
+CPU wall time covers the pure-jnp oracles (interpret-mode Pallas timing is
+meaningless); the derived column reports the TPU roofline time for the
+kernel's HBM traffic at 819 GB/s — the number the Pallas kernel targets."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from .common import time_fn, emit
+
+HBM_BW = 819e9
+
+
+def run():
+    d = 1 << 22
+    x = jax.random.normal(jax.random.PRNGKey(0), (d // 128, 128))
+    xi = jax.random.uniform(jax.random.PRNGKey(1), (d // 128, 128))
+
+    f = jax.jit(lambda a, b: ref.qsgd_quantize_ref(a, b, 16))
+    us = time_fn(f, x, xi)
+    bytes_moved = d * 4 * 2 + d          # read x, xi; write int8
+    emit("kernels/qsgd_quantize_ref", us,
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+
+    f = jax.jit(lambda a: ref.block_topk_mask_ref(a, 13))
+    us = time_fn(f, x)
+    bytes_moved = d * 4 * 2
+    emit("kernels/block_topk_ref", us,
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+
+    args = [jax.random.normal(jax.random.PRNGKey(i), (d // 128, 128))
+            for i in range(5)]
+    f = jax.jit(lambda *a: ref.ef_gossip_update_ref(*a, 1 / 3, 1 / 3, 0.05))
+    us = time_fn(f, *args)
+    bytes_moved = d * 4 * 8              # 5 reads + 3 writes
+    emit("kernels/ef_gossip_update_ref", us,
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+
+    B, S, H, Dh = 1, 1024, 4, 128
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh)) * 0.3
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, Dh)) * 0.3
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, Dh))
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, causal=True))
+    us = time_fn(f, q, k, v)
+    flops = 4 * B * H * S * S * Dh
+    emit("kernels/attention_ref", us,
+         f"S={S};tpu_compute_us={flops / 197e12 * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters=3, warmup=1, **kw):
+    """Median wall time in microseconds (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

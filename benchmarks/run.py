@@ -1,0 +1,18 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import bench_consensus, bench_topology, bench_sgd, \
+        bench_collectives, bench_kernels
+    bench_consensus.run()      # paper Figs 2-3
+    bench_topology.run()       # paper Fig 4
+    bench_sgd.run()            # paper Figs 5-6
+    bench_collectives.run()    # framework: wire bytes choco vs baselines
+    bench_kernels.run()        # Pallas kernel targets
+
+
+if __name__ == '__main__':
+    main()

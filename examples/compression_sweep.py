@@ -1,0 +1,60 @@
+"""Ablation: accuracy-vs-bits frontier of CHOCO-SGD across compression
+operators and ratios (paper §5.3, extended).
+
+Sweeps top_k / rand_k / qsgd over ratios on sorted logistic regression and
+prints the (transmitted megabits, final loss) frontier — the practical answer
+to "how hard can I compress before it hurts?".
+
+Run: PYTHONPATH=src python examples/compression_sweep.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ring, TopK, RandK, QSGD, Identity, run_choco_sgd,
+                        experiment_lr_schedule, auto_gamma)
+from repro.data.synthetic import make_logreg
+
+N, STEPS = 9, 1500
+
+
+def main():
+    prob = make_logreg("epsilon", n_nodes=N, sorted_assignment=True,
+                       m=1152, d=256, seed=2)
+    grad_fn = prob.make_grad_fn(batch_size=4)
+    lr = experiment_lr_schedule(1, 300.0, 300.0)
+    W = jnp.asarray(ring(N).W)
+    topo = ring(N)
+
+    def run(comp, gamma):
+        _, t = run_choco_sgd(jnp.zeros((N, prob.d)), W, grad_fn, comp, lr,
+                             gamma, STEPS, key=jax.random.PRNGKey(0),
+                             eval_fn=prob.full_loss)
+        mbits = comp.wire_bits(prob.d) * N * 2 * STEPS / 1e6
+        return float(t[-1]), mbits
+
+    print(f"{'operator':24s} {'omega':>8s} {'gamma':>8s} {'Mbits':>9s} {'loss':>8s}")
+    loss, mb = run(Identity(), 1.0)
+    print(f"{'exact':24s} {1.0:8.3f} {1.0:8.3f} {mb:9.1f} {loss:8.4f}")
+    for frac in (0.2, 0.05, 0.01):
+        for name, comp in ((f"top_{frac:.0%}", TopK(fraction=frac)),
+                           (f"rand_{frac:.0%}", RandK(fraction=frac))):
+            gamma = max(auto_gamma(topo.delta, topo.beta, comp.omega(prob.d)),
+                        0.04)
+            loss, mb = run(comp, gamma)
+            print(f"{name:24s} {comp.omega(prob.d):8.3f} {gamma:8.3f} "
+                  f"{mb:9.1f} {loss:8.4f}")
+    for s in (2, 16, 127):
+        comp = QSGD(s)
+        gamma = 0.2 if s < 16 else 0.5
+        loss, mb = run(comp, gamma)
+        print(f"{'qsgd_' + str(s):24s} {comp.omega(prob.d):8.3f} {gamma:8.3f} "
+              f"{mb:9.1f} {loss:8.4f}")
+
+
+if __name__ == "__main__":
+    main()

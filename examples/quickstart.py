@@ -1,0 +1,34 @@
+"""Quickstart: CHOCO-Gossip average consensus in 30 lines.
+
+25 simulated nodes on a ring agree on the mean of their vectors while
+transmitting only 1% of the coordinates per round (top-k compression).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import ring, TopK, QSGD, run_choco_gossip, run_gossip_baseline
+
+n, d = 25, 2000
+topo = ring(n)
+W = jnp.asarray(topo.W)
+x0 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+print(f"ring(n={n}): spectral gap delta={topo.delta:.4f}")
+
+# exact gossip baseline (full vectors on the wire)
+_, err_exact = run_gossip_baseline("exact", x0, W, None, 300)
+print(f"[exact  ] err: {err_exact[0]:.2e} -> {err_exact[-1]:.2e}  "
+      f"(32*d bits/msg)")
+
+# CHOCO-Gossip with 8-bit quantization: same rate, 4x fewer bits
+comp = QSGD(127)
+_, err_q = run_choco_gossip(x0, W, 1.0, comp, 300)
+print(f"[qsgd   ] err: {err_q[0]:.2e} -> {err_q[-1]:.2e}  "
+      f"({comp.wire_bits(d) / d:.1f} bits/coord)")
+
+# CHOCO-Gossip with 99% sparsification: still converges (Theorem 2)
+comp = TopK(fraction=0.01)
+_, err_s = run_choco_gossip(x0, W, 0.046, comp, 3000)
+print(f"[top 1% ] err: {err_s[0]:.2e} -> {err_s[-1]:.2e}  "
+      f"(~{100 * comp.omega(d):.0f}% of coords/msg)")

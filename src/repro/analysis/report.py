@@ -1,0 +1,65 @@
+"""Render dry-run JSONL records into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | status | compute s | memory s | collective s | "
+           "dominant | useful | state GB/dev | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r["status"] == "skip":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip | - | - | - | - | - | - | "
+                        f"{r['reason']} |")
+            continue
+        if r["status"] == "fail":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - | - | - | - | "
+                        f"{r.get('error', '')[:60]} |")
+            continue
+        rl = r.get("roofline", {})
+        mem = r.get("memory", {})
+        gb = mem.get("analytic_arg_bytes_per_device")
+        gb = f"{gb / 2**30:.2f}" if gb else "-"
+        useful = rl.get("useful_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {rl.get('compute_s', 0):.4f} | "
+            f"{rl.get('memory_s', 0):.3f} | {rl.get('collective_s', 0):.4f} | "
+            f"{rl.get('dominant', '-')} | {useful and f'{useful:.2f}' or '-'} | {gb} | |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def dominant_summary(recs: List[Dict]) -> str:
+    from collections import Counter
+    c = Counter(r["roofline"]["dominant"] for r in recs
+                if r["status"] == "ok" and "roofline" in r)
+    return ", ".join(f"{k}: {v}" for k, v in c.most_common())
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        recs = load(p)
+        print(f"## {p}")
+        print(roofline_table(recs))
+        print("dominant terms:", dominant_summary(recs))

@@ -1,0 +1,189 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs            / (peak_FLOP/s)         [per device]
+    memory     = HLO_bytes_accessed   / HBM_bw                [per device]
+    collective = wire_bytes           / ICI_bw                [per device]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device program).
+Wire bytes are parsed from ``compiled.as_text()`` by summing the shaped
+outputs of every collective op with the per-op wire-cost convention:
+
+    all-gather          bytes(output) * (g-1)/g     (ring algorithm)
+    reduce-scatter      bytes(input)  * (g-1)/g ~= bytes(output)*(g-1)
+    all-reduce          2 * bytes(buffer) * (g-1)/g (RS + AG)
+    all-to-all          bytes(output) * (g-1)/g
+    collective-permute  bytes(output)               (point-to-point)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.:  %ag = bf16[16,2048]{1,0} all-gather(...), replica_groups={{0,1},..}
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                       # iota format [n_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    buffer_bytes: Dict[str, int]      # summed shaped bytes per op kind
+    wire_bytes: Dict[str, float]      # per-device wire traffic per op kind
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int = 256) -> CollectiveStats:
+    counts = {k: 0 for k in _COLLECTIVES}
+    buf = {k: 0 for k in _COLLECTIVES}
+    wire = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not any(c in s for c in _COLLECTIVES):
+            continue
+        if re.search(r"(all-gather|all-reduce|collective-permute|all-to-all|reduce-scatter)-done", s):
+            continue                                  # async pair: count start only
+        m = _OP_RE.search(s)
+        if not m:
+            continue
+        kind = m.group(3)
+        # tuple-shaped outputs: sum every element shape on the line's LHS
+        lhs = s.split(kind)[0]
+        shapes = _TUPLE_RE.findall(lhs)
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes) or \
+            _shape_bytes(m.group(1), m.group(2))
+        g = max(_group_size(s, n_devices), 1)
+        counts[kind] += 1
+        buf[kind] += nbytes
+        frac = (g - 1) / g
+        if kind == "all-gather":
+            wire[kind] += nbytes * frac
+        elif kind == "all-reduce":
+            wire[kind] += 2 * nbytes * frac
+        elif kind == "reduce-scatter":
+            wire[kind] += nbytes * frac
+        elif kind == "all-to-all":
+            wire[kind] += nbytes * frac
+        else:  # collective-permute: point-to-point
+            wire[kind] += nbytes
+    return CollectiveStats(counts, buf, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    bytes_accessed: float        # per-device HLO bytes
+    wire_bytes: float            # per-device collective bytes
+    n_devices: int
+    model_flops: float           # analytic useful flops (whole step, all devices)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.bytes_accessed / HBM_BW
+        self.collective_s = self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_ratio(self) -> Optional[float]:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else None
+
+    @property
+    def step_time_s(self) -> float:
+        """Simple max-of-terms roofline estimate."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flop_ratio,
+            "roofline_step_s": self.step_time_s,
+        }
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float) -> "tuple[Roofline, CollectiveStats]":
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text(), n_devices)
+    rl = Roofline(flops=flops, bytes_accessed=byts,
+                  wire_bytes=stats.total_wire_bytes, n_devices=n_devices,
+                  model_flops=model_flops)
+    return rl, stats
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic useful FLOPs per step: 6 N D (train) / 2 N D (inference),
+    N = active params (exact, via eval_shape), D = tokens processed."""
+    from repro.models.transformer import count_active_params
+    n = count_active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch     # decode: one token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,65 @@
+"""Checkpointing: flat-npz pytree save/restore (no external deps).
+
+Saves the full decentralized TrainState — including the CHOCO error-feedback
+states x_hat and s, which MUST survive restarts (dropping them resets the
+compression error memory and breaks the convergence guarantee of Theorem 2).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+_SEP = "__"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":     # npz cannot store ml_dtypes
+            arr = arr.astype(np.float32)     # lossless widening
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree, metadata: Dict[str, Any] | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if metadata is not None:
+        with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def restore_pytree(path: str, like) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for p, leaf in leaves_with_path:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in p)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))   # restore original dtype (bf16 etc.)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_metadata(path: str) -> Dict[str, Any]:
+    with open(re.sub(r"\.npz$", "", path) + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,276 @@
+"""Distributed CHOCO gossip over a device mesh.
+
+The gossip ring lives on one mesh axis (``gossip_axis``): every slice of the
+mesh along that axis is one "node" of the paper's communication graph.  The
+exchange is implemented inside ``shard_map`` with ``jax.lax.ppermute`` of the
+*compressed payload only* — the collective bytes in the compiled HLO are the
+paper's transmitted bits.  Every tensor-parallel / FSDP shard compresses and
+gossips its own slice (coordinate-wise operators commute with sharding).
+
+Three exchange modes:
+  * ``choco``     — Algorithm 2 lines 4-9 (compressed, error-feedback)
+  * ``plain``     — Algorithm 3 line 4-5 (exact neighbour averaging)
+  * ``allreduce`` — centralized mini-batch SGD baseline (pmean over the axis)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compression import Compressor
+
+
+def ring_perm(n: int, shift: int):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+def ring_weights(n: int) -> Tuple[float, float]:
+    """Uniform-averaging ring W (paper Table 1): returns (w_self, w_neighbor).
+    n>=3: degree-2 ring, w = 1/3 each.  n==2: single edge, 1/2 each.
+    n==1: trivial."""
+    if n == 1:
+        return 1.0, 0.0
+    if n == 2:
+        return 0.5, 0.5
+    return 1.0 / 3.0, 1.0 / 3.0
+
+
+def _leaf_keys(key, n: int, salt: int):
+    return jax.random.split(jax.random.fold_in(key, salt), n)
+
+
+# Leaves larger than this are compressed row-blockwise: reshape to (R, BLOCK)
+# and vmap the operator per row.  Identical omega guarantee (Assumption 1 per
+# block), avoids int32 overflow in lax.top_k for multi-billion-element expert
+# stacks, and matches the Pallas block-topk kernel's TPU-native semantics.
+BLOCK_COMPRESS_SIZE = 1 << 22
+
+
+def _compress_leaf(compressor: Compressor, key, flat):
+    """Returns (payload, dense_fn) where dense_fn(payload) -> flat dense q."""
+    d = flat.size
+    if d <= BLOCK_COMPRESS_SIZE:
+        pl_ = compressor.compress(key, flat)
+        return pl_, lambda p: p.dense()
+    C = BLOCK_COMPRESS_SIZE
+    R = -(-d // C)
+    padded = jnp.pad(flat, (0, R * C - d))
+    rows = padded.reshape(R, C)
+    if compressor.stochastic:
+        keys = jax.random.split(key, R)
+        pl_ = jax.vmap(compressor.compress)(keys, rows)
+    else:
+        pl_ = jax.vmap(lambda r: compressor.compress(None, r))(rows)
+
+    def dense_fn(p):
+        return jax.vmap(lambda q: q.dense())(p).reshape(R * C)[:d]
+
+    return pl_, dense_fn
+
+
+def _axis_edges(n: int) -> int:
+    """Ring edges contributed by one torus axis of size n."""
+    return 2 if n > 2 else (1 if n == 2 else 0)
+
+
+def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                            compressor: Compressor, gamma: float,
+                            exact_small_leaves: bool = False,
+                            small_leaf_threshold: int = 8_192) -> Callable:
+    """CHOCO gossip on a 2-D torus of mesh axes (paper Table 1: torus
+    delta = O(1/n) vs ring O(1/n^2)).  Each node compresses ONCE and
+    ppermutes the payload along every axis ring — 2x the ring's wire for a
+    quadratically better spectral gap.  Beyond-paper: the paper analyses the
+    torus but never maps it onto a physical interconnect; here the two axes
+    are pod x data rings of the ICI fabric."""
+    from repro.core.compression import Identity
+    identity = Identity()
+    n_edges = sum(_axis_edges(n) for n in sizes)
+    w = 1.0 / (1.0 + n_edges)        # uniform-averaging torus W
+
+    def local_fn(key, x_half, x_hat, s):
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        leaves_h, treedef = jax.tree_util.tree_flatten(x_half)
+        leaves_hat = treedef.flatten_up_to(x_hat)
+        leaves_s = treedef.flatten_up_to(s)
+        keys = _leaf_keys(key, len(leaves_h), 0)
+
+        payloads, dense_fns, new_hat, q_dense = [], [], [], []
+        for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
+            delta = (lh.astype(lhat.dtype) - lhat).ravel()
+            comp_i = (identity if exact_small_leaves
+                      and delta.size <= small_leaf_threshold else compressor)
+            pl, dfn = _compress_leaf(
+                comp_i, keys[i] if comp_i.stochastic else None, delta)
+            payloads.append(pl)
+            dense_fns.append(dfn)
+            qd = dfn(pl)
+            q_dense.append(qd)
+            new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
+
+        nbr_sum = [q * 0.0 for q in q_dense]
+        for a, n in zip(axes, sizes):
+            if n < 2:
+                continue
+            got = jax.lax.ppermute(payloads, a, ring_perm(n, 1))
+            nbr_sum = [acc + dfn(g) for acc, dfn, g in zip(nbr_sum, dense_fns, got)]
+            if n > 2:
+                got = jax.lax.ppermute(payloads, a, ring_perm(n, -1))
+                nbr_sum = [acc + dfn(g) for acc, dfn, g in zip(nbr_sum, dense_fns, got)]
+
+        new_s, new_x = [], []
+        for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_dense, nbr_sum, new_hat):
+            sn = ls + (w * qd + w * nb).reshape(lh.shape).astype(ls.dtype)
+            new_s.append(sn)
+            new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
+
+        unflatten = treedef.unflatten
+        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+
+    return local_fn
+
+
+def make_choco_gossip_fn(*, axis: str, axis_size: int, compressor: Compressor,
+                         gamma: float, exact_small_leaves: bool = False,
+                         small_leaf_threshold: int = 8_192) -> Callable:
+    """Returns local_fn(key, x_half, x_hat, s) -> (x, x_hat, s) for shard_map.
+
+    Implements (per leaf, per local shard):
+        q      = Q(x_half - x_hat)
+        x_hat += q
+        s     += sum_j w_ij q_j            (self + ring neighbours, ppermute'd)
+        x      = x_half + gamma (s - x_hat)
+
+    exact_small_leaves: leaves below the threshold (norm scales, biases) ship
+    uncompressed — for a top-1% sparsifier the (value, index) pair costs 8
+    bytes/coordinate, so compressing a 4 KB norm vector saves nothing while
+    adding top-k latency; beyond-paper toggle, off for paper-faithful runs.
+    """
+    from repro.core.compression import Identity
+    identity = Identity()
+    w_self, w_nbr = ring_weights(axis_size)
+    fwd = ring_perm(axis_size, 1)     # receive from left neighbour
+    bwd = ring_perm(axis_size, -1)    # receive from right neighbour
+
+    def local_fn(key, x_half, x_hat, s):
+        # distinct randomness per gossip node and per model/fsdp shard
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+        leaves_h, treedef = jax.tree_util.tree_flatten(x_half)
+        leaves_hat = treedef.flatten_up_to(x_hat)
+        leaves_s = treedef.flatten_up_to(s)
+        keys = _leaf_keys(key, len(leaves_h), 0)
+
+        payloads, dense_fns, new_hat, q_dense = [], [], [], []
+        for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
+            # compress in the EF-state dtype: bf16 states -> bf16 wire values
+            delta = (lh.astype(lhat.dtype) - lhat).ravel()
+            comp_i = (identity if exact_small_leaves
+                      and delta.size <= small_leaf_threshold else compressor)
+            pl, dfn = _compress_leaf(
+                comp_i, keys[i] if comp_i.stochastic else None, delta)
+            payloads.append(pl)
+            dense_fns.append(dfn)
+            qd = dfn(pl)
+            q_dense.append(qd)
+            new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
+
+        if axis_size == 1:
+            nbr_sum = [q * 0.0 for q in q_dense]
+        elif axis_size == 2:
+            got = jax.lax.ppermute(payloads, axis, fwd)
+            nbr_sum = [dfn(g) for dfn, g in zip(dense_fns, got)]
+        else:
+            got_l = jax.lax.ppermute(payloads, axis, fwd)
+            got_r = jax.lax.ppermute(payloads, axis, bwd)
+            nbr_sum = [dfn(l) + dfn(r)
+                       for dfn, l, r in zip(dense_fns, got_l, got_r)]
+
+        new_s, new_x = [], []
+        for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_dense, nbr_sum, new_hat):
+            sn = ls + (w_self * qd + w_nbr * nb).reshape(lh.shape).astype(ls.dtype)
+            new_s.append(sn)
+            new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
+
+        unflatten = treedef.unflatten
+        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+
+    return local_fn
+
+
+def make_plain_gossip_fn(*, axis: str, axis_size: int) -> Callable:
+    """Exact neighbour averaging (Algorithm 3): x = sum_j w_ij x_j."""
+    w_self, w_nbr = ring_weights(axis_size)
+    fwd = ring_perm(axis_size, 1)
+    bwd = ring_perm(axis_size, -1)
+
+    def local_fn(key, x_half, x_hat, s):
+        del key
+        if axis_size == 1:
+            return x_half, x_hat, s
+        if axis_size == 2:
+            other = jax.lax.ppermute(x_half, axis, fwd)
+            new_x = jax.tree.map(lambda a, b: w_self * a + w_nbr * b, x_half, other)
+        else:
+            left = jax.lax.ppermute(x_half, axis, fwd)
+            right = jax.lax.ppermute(x_half, axis, bwd)
+            new_x = jax.tree.map(lambda a, b, c: w_self * a + w_nbr * (b + c),
+                                 x_half, left, right)
+        return new_x, x_hat, s
+
+    return local_fn
+
+
+def make_allreduce_fn(*, axis: str, axis_size: int) -> Callable:
+    """Centralized baseline: exact average over the gossip axis (all-reduce)."""
+    def local_fn(key, x_half, x_hat, s):
+        del key
+        new_x = jax.tree.map(lambda a: jax.lax.pmean(a, axis), x_half)
+        return new_x, x_hat, s
+    return local_fn
+
+
+def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
+                         compressor: Optional[Compressor] = None,
+                         gamma: float = 1.0, exact_small_leaves: bool = False,
+                         small_leaf_threshold: int = 8_192) -> Callable:
+    """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
+
+    state_specs: pytree of PartitionSpec matching the param pytree (with the
+    leading node dim mapped to `axis`).
+    """
+    if isinstance(axis, (tuple, list)):        # 2-D torus gossip
+        sizes = tuple(mesh.shape[a] for a in axis)
+        if mode != "choco":
+            raise NotImplementedError("torus gossip implemented for choco mode")
+        local_fn = make_choco_gossip_2d_fn(
+            axes=tuple(axis), sizes=sizes, compressor=compressor, gamma=gamma,
+            exact_small_leaves=exact_small_leaves,
+            small_leaf_threshold=small_leaf_threshold)
+        return jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(), state_specs, state_specs, state_specs),
+            out_specs=(state_specs, state_specs, state_specs),
+        )
+    axis_size = mesh.shape[axis]
+    if mode == "choco":
+        local_fn = make_choco_gossip_fn(axis=axis, axis_size=axis_size,
+                                        compressor=compressor, gamma=gamma,
+                                        exact_small_leaves=exact_small_leaves,
+                                        small_leaf_threshold=small_leaf_threshold)
+    elif mode == "plain":
+        local_fn = make_plain_gossip_fn(axis=axis, axis_size=axis_size)
+    elif mode == "allreduce":
+        local_fn = make_allreduce_fn(axis=axis, axis_size=axis_size)
+    else:
+        raise ValueError(mode)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), state_specs, state_specs, state_specs),
+        out_specs=(state_specs, state_specs, state_specs),
+    )

@@ -1,0 +1,25 @@
+"""HuBERT-XLarge — encoder-only audio transformer (same arch as wav2vec2)
+[arXiv:2106.07447].  Conv feature extractor is a stub (carve-out):
+input_specs() provides 512-dim frame embeddings; the model is the 48-layer
+bidirectional encoder + masked-prediction head over 504 cluster classes.
+No autoregressive decode — decode shapes are skipped (see DESIGN.md §4)."""
+from repro.configs.base import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="audio",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab_size=504,
+    causal=False, mlp_type="gelu",
+    frontend=FrontendConfig(kind="audio", n_tokens=0, embed_dim=512),
+    remat="dots",
+    source="arXiv:2106.07447",
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="hubert-xlarge-smoke", family="audio",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+    d_ff=512, vocab_size=64,
+    causal=False, mlp_type="gelu",
+    frontend=FrontendConfig(kind="audio", n_tokens=0, embed_dim=128),
+    source="arXiv:2106.07447",
+)

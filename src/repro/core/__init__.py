@@ -1,0 +1,20 @@
+"""CHOCO core: compression operators, gossip topologies, CHOCO-Gossip /
+CHOCO-SGD, and the baselines the paper compares against."""
+from .compression import (Compressor, Identity, RandK, TopK, QSGD, SignNorm,
+                          RandomizedGossip, make_compressor,
+                          SparsePayload, QuantPayload, DensePayload)
+from .topology import (Topology, ring, torus2d, fully_connected, chain, star,
+                       hypercube, make_topology)
+from .choco_gossip import (GossipState, EfficientGossipState, init_state,
+                           choco_gossip_round, run_choco_gossip,
+                           choco_gossip_round_efficient,
+                           run_choco_gossip_efficient,
+                           theorem2_stepsize, theorem2_rate, auto_stepsize)
+from .choco_sgd import (ChocoSGDState, choco_sgd_step, run_choco_sgd,
+                        experiment_lr_schedule, theorem4_lr_schedule,
+                        theorem4_a, auto_gamma)
+from .baselines import (exact_gossip_round, q1_gossip_round, q2_gossip_round,
+                        run_gossip_baseline, plain_dsgd_step, DCDState,
+                        dcd_sgd_step, ECDState, ecd_sgd_step,
+                        centralized_sgd_step)
+from .consensus import AveragingScheme, exact_averaging, choco_averaging

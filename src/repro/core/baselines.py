@@ -1,0 +1,156 @@
+"""Baseline gossip and decentralized-SGD schemes the paper compares against.
+
+Gossip (consensus) baselines, §3.2-3.3:
+  * (E-G)   exact gossip,           Xiao & Boyd 2004
+  * (Q1-G)  direct quantization,    Aysal et al. 2008   -- loses the average
+  * (Q2-G)  difference quantization Carli et al. 2007   -- non-vanishing noise
+
+Optimization baselines, §5.3:
+  * plain decentralized SGD (Algorithm 3)
+  * DCD-SGD, ECD-SGD (Tang et al. 2018a)
+  * centralized mini-batch SGD (the star-topology reference)
+
+All schemes are written in the (n, d) matrix form of Appendix B and are
+scan/jit-compatible so the benchmark harness can run them end to end.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compression import Compressor
+from .choco_gossip import _rowwise_compress
+
+# ---------------------------------------------------------------------------
+# Consensus baselines
+# ---------------------------------------------------------------------------
+
+
+def exact_gossip_round(X: jax.Array, W: jax.Array, gamma: float = 1.0) -> jax.Array:
+    """(E-G): X' = X + gamma (W - I) X."""
+    return X + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ X
+
+
+def q1_gossip_round(X: jax.Array, W: jax.Array, compressor: Compressor,
+                    key: Optional[jax.Array] = None, gamma: float = 1.0) -> jax.Array:
+    """(Q1-G): Delta_ij = Q(x_j) - x_i  =>  X' = X + gamma (W Q(X) - X).
+    Does NOT preserve the average -> converges only to a neighbourhood."""
+    QX = _rowwise_compress(compressor, key, X)
+    return X + gamma * (W @ QX - X)
+
+
+def q2_gossip_round(X: jax.Array, W: jax.Array, compressor: Compressor,
+                    key: Optional[jax.Array] = None, gamma: float = 1.0) -> jax.Array:
+    """(Q2-G): Delta_ij = Q(x_j) - Q(x_i)  =>  X' = X + gamma (W - I) Q(X).
+    Preserves the average but the compression noise ||Q(x)|| does not vanish."""
+    QX = _rowwise_compress(compressor, key, X)
+    return X + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ QX
+
+
+@partial(jax.jit, static_argnames=("scheme", "compressor", "steps"))
+def run_gossip_baseline(scheme: str, x0: jax.Array, W: jax.Array,
+                        compressor: Optional[Compressor], steps: int,
+                        gamma: float = 1.0, key: Optional[jax.Array] = None):
+    """Run a consensus baseline; returns (X_final, per-step errors)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+
+    def body(X, k):
+        if scheme == "exact":
+            Xn = exact_gossip_round(X, W, gamma)
+        elif scheme == "q1":
+            Xn = q1_gossip_round(X, W, compressor, k, gamma)
+        elif scheme == "q2":
+            Xn = q2_gossip_round(X, W, compressor, k, gamma)
+        else:
+            raise ValueError(scheme)
+        err = jnp.mean(jnp.sum((Xn - xbar) ** 2, axis=-1))
+        return Xn, err
+
+    keys = jax.random.split(key, steps)
+    return jax.lax.scan(body, x0, keys)
+
+
+# ---------------------------------------------------------------------------
+# Decentralized SGD baselines
+#
+# grad_fn(params_row, node_id, key) -> stochastic gradient, vmapped over nodes.
+# ---------------------------------------------------------------------------
+
+GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+def _node_grads(grad_fn: GradFn, X: jax.Array, key: jax.Array) -> jax.Array:
+    n = X.shape[0]
+    keys = jax.random.split(key, n)
+    return jax.vmap(grad_fn)(X, jnp.arange(n), keys)
+
+
+def plain_dsgd_step(X: jax.Array, W: jax.Array, grad_fn: GradFn,
+                    eta: jax.Array, key: jax.Array) -> jax.Array:
+    """Algorithm 3: local SGD step then exact averaging with neighbours."""
+    G = _node_grads(grad_fn, X, key)
+    return W @ (X - eta * G)
+
+
+class DCDState(NamedTuple):
+    x: jax.Array      # (n, d) local models == public replicas (x == x_hat in DCD)
+
+
+def dcd_sgd_step(state: DCDState, W: jax.Array, grad_fn: GradFn,
+                 compressor: Compressor, eta: jax.Array, key: jax.Array) -> DCDState:
+    """DCD-SGD (difference compression, Tang et al. 2018a, Alg. 1):
+
+        x_i^{t+1/2} = sum_j w_ij x_j^t - eta g_i        (exact replicas)
+        z_i         = x_i^{t+1/2} - x_i^t
+        x_i^{t+1}   = x_i^t + Q(z_i)                     (everyone integrates Q(z))
+
+    Requires high-precision Q; diverges for aggressive compression (paper Fig 5-6).
+    """
+    gkey, ckey = jax.random.split(key)
+    G = _node_grads(grad_fn, state.x, gkey)
+    x_half = W @ state.x - eta * G
+    z = x_half - state.x
+    qz = _rowwise_compress(compressor, ckey, z)
+    return DCDState(x=state.x + qz)
+
+
+class ECDState(NamedTuple):
+    x: jax.Array       # (n, d) local models
+    x_tilde: jax.Array  # (n, d) extrapolated public replicas
+    t: jax.Array       # scalar step counter
+
+
+def ecd_sgd_step(state: ECDState, W: jax.Array, grad_fn: GradFn,
+                 compressor: Compressor, eta: jax.Array, key: jax.Array) -> ECDState:
+    """ECD-SGD (extrapolation compression, Tang et al. 2018a, Alg. 2):
+
+        x_i^{t+1/2} = sum_j w_ij xt_j^t - eta g_i
+        y_i         = (1 - theta_t) xt_i^t + theta_t x_i^{t+1/2},  theta_t ~ O(t)
+        xt_i^{t+1}  = Q(y_i) scaled back:  xt^{t+1} = (1-1/theta) xt + (1/theta) Q(...)
+
+    We follow Tang et al.'s published recursion with theta_t = (t+2)/2:
+        z_i^{t+1} = (1 - theta_t) x_tilde_i^t + theta_t * x_i^{t+1/2}
+        x_tilde^{t+1} = (1 - 1/theta_t) x_tilde^t + (1/theta_t) Q(z)
+    Known to be fragile for coarse compression (observed in the paper and here).
+    """
+    gkey, ckey = jax.random.split(key)
+    G = _node_grads(grad_fn, state.x_tilde, gkey)
+    x_half = W @ state.x_tilde - eta * G
+    theta = (state.t.astype(x_half.dtype) + 2.0) / 2.0
+    z = (1.0 - theta) * state.x_tilde + theta * x_half
+    qz = _rowwise_compress(compressor, ckey, z)
+    x_tilde = (1.0 - 1.0 / theta) * state.x_tilde + (1.0 / theta) * qz
+    return ECDState(x=x_half, x_tilde=x_tilde, t=state.t + 1)
+
+
+def centralized_sgd_step(x: jax.Array, grad_fn: GradFn, n: int,
+                         eta: jax.Array, key: jax.Array) -> jax.Array:
+    """Centralized mini-batch SGD: one model, average of n worker gradients."""
+    X = jnp.broadcast_to(x, (n,) + x.shape)
+    G = _node_grads(grad_fn, X, key)
+    return x - eta * jnp.mean(G, axis=0)

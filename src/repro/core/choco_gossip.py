@@ -1,0 +1,147 @@
+"""CHOCO-Gossip (paper Algorithm 1 / matrix form of Appendix B).
+
+State per node i: local x_i and the *public* copy x_hat_i (agreed upon by all
+neighbours, because everyone integrates the same compressed messages).
+
+Matrix form over X, Xhat in R^{n x d}  (rows = nodes):
+
+    Q_t     = Q(X - Xhat)                 (row-wise compression)
+    Xhat'   = Xhat + Q_t
+    X'      = X + gamma * (W - I) @ Xhat'
+
+Theorem 2: with gamma* = delta^2 omega / (16 d + d^2 + 4 b^2 + 2 d b^2 - 8 d w)
+(d = delta, b = beta, w = omega) the Lyapunov error contracts by
+(1 - delta^2 omega / 82) per round.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compression import Compressor
+from .topology import Topology
+
+
+class GossipState(NamedTuple):
+    x: jax.Array        # (n, d) local iterates
+    x_hat: jax.Array    # (n, d) public copies
+
+
+def theorem2_stepsize(delta: float, beta: float, omega: float) -> float:
+    """Consensus stepsize gamma* of Theorem 2 (eq. 20)."""
+    num = delta * delta * omega
+    den = (16 * delta + delta ** 2 + 4 * beta ** 2
+           + 2 * delta * beta ** 2 - 8 * delta * omega)
+    return float(num / den)
+
+
+def theorem2_rate(delta: float, omega: float) -> float:
+    """Per-round contraction factor  (1 - delta^2 omega / 82)."""
+    return 1.0 - delta * delta * omega / 82.0
+
+
+def init_state(x0: jax.Array) -> GossipState:
+    return GossipState(x=x0, x_hat=jnp.zeros_like(x0))
+
+
+def _rowwise_compress(compressor: Compressor, key: Optional[jax.Array],
+                      M: jax.Array) -> jax.Array:
+    """Apply Q to each row of M (dense output)."""
+    n = M.shape[0]
+    if compressor.stochastic:
+        keys = jax.random.split(key, n)
+        return jax.vmap(compressor.apply)(keys, M)
+    return jax.vmap(lambda r: compressor.apply(None, r))(M)
+
+
+def choco_gossip_round(state: GossipState, W: jax.Array, gamma: float,
+                       compressor: Compressor,
+                       key: Optional[jax.Array] = None) -> GossipState:
+    """One synchronous CHOCO-Gossip round (Algorithm 1, lines 2-7)."""
+    q = _rowwise_compress(compressor, key, state.x - state.x_hat)
+    x_hat = state.x_hat + q
+    x = state.x + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ x_hat
+    return GossipState(x=x, x_hat=x_hat)
+
+
+@partial(jax.jit, static_argnames=("compressor", "steps"))
+def run_choco_gossip(x0: jax.Array, W: jax.Array, gamma: float,
+                     compressor: Compressor, steps: int,
+                     key: Optional[jax.Array] = None):
+    """Run `steps` rounds; returns (final_state, per-step consensus errors).
+
+    error_t = (1/n) sum_i ||x_i^t - xbar||^2   (as plotted in Figs 2-3).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+
+    def body(carry, k):
+        state = carry
+        new = choco_gossip_round(state, W, gamma, compressor, k)
+        err = jnp.mean(jnp.sum((new.x - xbar) ** 2, axis=-1))
+        return new, err
+
+    keys = jax.random.split(key, steps)
+    final, errs = jax.lax.scan(body, init_state(x0), keys)
+    return final, errs
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient variant (paper Algorithm 5): each node stores only
+# x_i, x_hat_i and s_i = sum_j w_ij x_hat_j.  Used to cross-check Algorithm 1
+# and as the template for the distributed shard_map implementation.
+# ---------------------------------------------------------------------------
+
+class EfficientGossipState(NamedTuple):
+    x: jax.Array        # (n, d)
+    x_hat: jax.Array    # (n, d)   own public copy only
+    s: jax.Array        # (n, d)   weighted neighbour aggregate
+
+
+def init_efficient_state(x0: jax.Array) -> EfficientGossipState:
+    return EfficientGossipState(x=x0, x_hat=jnp.zeros_like(x0),
+                                s=jnp.zeros_like(x0))
+
+
+def choco_gossip_round_efficient(state: EfficientGossipState, W: jax.Array,
+                                 gamma: float, compressor: Compressor,
+                                 key: Optional[jax.Array] = None
+                                 ) -> EfficientGossipState:
+    """Algorithm 5: q_i = Q(x_i - x_hat_i); x_hat_i += q_i;
+    s_i += sum_j w_ij q_j;  x_i += gamma (s_i - x_hat_i).
+
+    The (n,d) matrix `W @ q` stands in for the neighbour exchange — in the
+    distributed runtime it becomes two `lax.ppermute`s of the payload.
+    """
+    q = _rowwise_compress(compressor, key, state.x - state.x_hat)
+    x_hat = state.x_hat + q
+    s = state.s + W @ q
+    x = state.x + gamma * (s - x_hat)
+    return EfficientGossipState(x=x, x_hat=x_hat, s=s)
+
+
+@partial(jax.jit, static_argnames=("compressor", "steps"))
+def run_choco_gossip_efficient(x0: jax.Array, W: jax.Array, gamma: float,
+                               compressor: Compressor, steps: int,
+                               key: Optional[jax.Array] = None):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+
+    def body(state, k):
+        new = choco_gossip_round_efficient(state, W, gamma, compressor, k)
+        err = jnp.mean(jnp.sum((new.x - xbar) ** 2, axis=-1))
+        return new, err
+
+    keys = jax.random.split(key, steps)
+    final, errs = jax.lax.scan(body, init_efficient_state(x0), keys)
+    return final, errs
+
+
+def auto_stepsize(topo: Topology, compressor: Compressor, d: int) -> float:
+    """Theorem-2 stepsize from a topology + compressor (conservative)."""
+    return theorem2_stepsize(topo.delta, topo.beta, compressor.omega(d))

@@ -1,0 +1,107 @@
+"""CHOCO-SGD (paper Algorithm 2, memory-efficient Algorithm 6).
+
+Per node i and round t:
+    g_i    = grad F_i(x_i, xi_i)                  (local stochastic gradient)
+    x_i'   = x_i - eta_t g_i                      (SGD half-step)
+    q_i    = Q(x_i' - x_hat_i)                    (compressed publication)
+    x_hat_i += q_i ;  s_i += sum_j w_ij q_j       (neighbour exchange)
+    x_i    = x_i' + gamma (s_i - x_hat_i)         (gossip mixing)
+
+This module provides the (n, d) matrix simulator used by the paper-figure
+benchmarks, plus the stepsize schedules of Theorem 4 and of the experiments
+(§5.3: eta_t = m a / (t + b)).  The multi-device implementation lives in
+``repro.train`` / ``repro.comm`` and follows the exact same update rules.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compression import Compressor
+from .choco_gossip import _rowwise_compress, theorem2_stepsize
+
+
+GradFn = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+class ChocoSGDState(NamedTuple):
+    x: jax.Array        # (n, d) local models
+    x_hat: jax.Array    # (n, d) public copies
+    s: jax.Array        # (n, d) weighted neighbour aggregate sum_j w_ij x_hat_j
+    t: jax.Array        # scalar step
+
+
+def init_state(x0: jax.Array) -> ChocoSGDState:
+    return ChocoSGDState(x=x0, x_hat=jnp.zeros_like(x0),
+                         s=jnp.zeros_like(x0), t=jnp.zeros((), jnp.int32))
+
+
+def choco_sgd_step(state: ChocoSGDState, W: jax.Array, grad_fn: GradFn,
+                   compressor: Compressor, eta: jax.Array, gamma: float,
+                   key: jax.Array) -> ChocoSGDState:
+    """One CHOCO-SGD round (Algorithm 6, matrix form)."""
+    n = state.x.shape[0]
+    gkey, ckey = jax.random.split(key)
+    gkeys = jax.random.split(gkey, n)
+    G = jax.vmap(grad_fn)(state.x, jnp.arange(n), gkeys)
+    x_half = state.x - eta * G
+    q = _rowwise_compress(compressor, ckey, x_half - state.x_hat)
+    x_hat = state.x_hat + q
+    s = state.s + W @ q
+    x = x_half + gamma * (s - x_hat)
+    return ChocoSGDState(x=x, x_hat=x_hat, s=s, t=state.t + 1)
+
+
+# --- stepsize schedules -----------------------------------------------------
+
+def experiment_lr_schedule(m: int, a: float, b: float) -> Callable[[jax.Array], jax.Array]:
+    """Paper §5.3: eta_t = m * a / (t + b)."""
+    def eta(t):
+        return m * a / (t.astype(jnp.float32) + b)
+    return eta
+
+
+def theorem4_lr_schedule(mu: float, a: float) -> Callable[[jax.Array], jax.Array]:
+    """Theorem 4: eta_t = 4 / (mu (a + t)),  a >= max(410/(delta^2 omega), 16 kappa)."""
+    def eta(t):
+        return 4.0 / (mu * (a + t.astype(jnp.float32)))
+    return eta
+
+
+def theorem4_a(delta: float, omega: float, kappa: float) -> float:
+    return max(410.0 / (delta * delta * omega), 16.0 * kappa)
+
+
+# --- driver -----------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("grad_fn", "compressor", "steps", "lr_fn",
+                                   "eval_fn", "eval_every"))
+def run_choco_sgd(x0: jax.Array, W: jax.Array, grad_fn: GradFn,
+                  compressor: Compressor, lr_fn, gamma: float, steps: int,
+                  key: Optional[jax.Array] = None,
+                  eval_fn=None, eval_every: int = 1):
+    """Run CHOCO-SGD; returns (final state, metric trace).
+
+    eval_fn(xbar) -> scalar (e.g. suboptimality f(xbar) - f*); evaluated on the
+    node-average every `eval_every` steps (matching the paper's plots).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def body(state, k):
+        eta = lr_fn(state.t)
+        new = choco_sgd_step(state, W, grad_fn, compressor, eta, gamma, k)
+        xbar = jnp.mean(new.x, axis=0)
+        metric = eval_fn(xbar) if eval_fn is not None else jnp.float32(0)
+        return new, metric
+
+    keys = jax.random.split(key, steps)
+    return jax.lax.scan(body, init_state(x0), keys)
+
+
+def auto_gamma(delta: float, beta: float, omega: float) -> float:
+    """Theorem-2 consensus stepsize (used by Theorem 4)."""
+    return theorem2_stepsize(delta, beta, omega)

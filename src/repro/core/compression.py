@@ -1,0 +1,320 @@
+"""Compression operators Q: R^d -> R^d  (paper §3.3-§3.5, Assumption 1).
+
+Every operator satisfies the paper's quality bound
+
+    E_Q || Q(x) - x ||^2  <=  (1 - omega) ||x||^2         (7)
+
+with a known compression factor ``omega in (0, 1]`` (omega = 1 means exact).
+
+Two views of each operator are provided:
+
+* ``apply(key, x) -> Q(x)``          -- dense output, used by the simulators.
+* ``compress(key, x) -> payload``    -- the *wire format* actually transmitted
+  (sparse values+indices, int8 codes + scale, ...).  ``decompress(payload)``
+  reconstructs the dense Q(x).  The distributed runtime ppermutes payloads,
+  so compiled HLO collective bytes reflect the true communication volume.
+
+All operators are shape-polymorphic over flat vectors and are safe under
+``jit``/``vmap`` (k is resolved statically from ``x.size``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import register_pytree_node_class
+
+
+# ---------------------------------------------------------------------------
+# Wire payloads
+# ---------------------------------------------------------------------------
+
+@register_pytree_node_class
+@dataclasses.dataclass
+class SparsePayload:
+    """k values + k int32 indices of a d-dim vector."""
+    values: jax.Array          # (k,)
+    indices: jax.Array         # (k,) int32
+    dim: int                   # static
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.dim,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def dense(self) -> jax.Array:
+        return jnp.zeros((self.dim,), self.values.dtype).at[self.indices].set(self.values)
+
+    def wire_bits(self) -> int:
+        k = self.values.shape[-1]
+        return int(k) * (self.values.dtype.itemsize * 8 + 32)
+
+
+@register_pytree_node_class
+@dataclasses.dataclass
+class QuantPayload:
+    """Per-coordinate integer codes + a single scale (qsgd wire format)."""
+    codes: jax.Array           # (d,) small int
+    scale: jax.Array           # () f32:  ||x|| / (s * tau)
+    bits_per_coord: int        # static, for accounting
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits_per_coord,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    def dense(self) -> jax.Array:
+        return self.codes.astype(jnp.float32) * self.scale
+
+    def wire_bits(self) -> int:
+        return int(self.codes.shape[-1]) * self.bits_per_coord + 32
+
+
+@register_pytree_node_class
+@dataclasses.dataclass
+class DensePayload:
+    x: jax.Array
+
+    def tree_flatten(self):
+        return (self.x,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def dense(self) -> jax.Array:
+        return self.x
+
+    def wire_bits(self) -> int:
+        return int(self.x.size) * self.x.dtype.itemsize * 8
+
+
+# ---------------------------------------------------------------------------
+# Operators
+# ---------------------------------------------------------------------------
+
+class Compressor:
+    """Base class.  Subclasses implement ``compress`` and ``omega``."""
+
+    name: str = "base"
+    #: True if E_Q Q(x) = x (needed by Q1/Q2/DCD/ECD baselines' theory)
+    unbiased: bool = False
+    #: True if the operator uses randomness (needs a key)
+    stochastic: bool = True
+
+    def compress(self, key: Optional[jax.Array], x: jax.Array):
+        raise NotImplementedError
+
+    def apply(self, key: Optional[jax.Array], x: jax.Array) -> jax.Array:
+        return self.compress(key, x).dense()
+
+    def __call__(self, key, x):
+        return self.apply(key, x)
+
+    def omega(self, d: int) -> float:
+        raise NotImplementedError
+
+    def wire_bits(self, d: int) -> int:
+        """Bits on the wire for one d-dim vector (for benchmark accounting)."""
+        raise NotImplementedError
+
+
+class Identity(Compressor):
+    name = "identity"
+    unbiased = True
+    stochastic = False
+
+    def compress(self, key, x):
+        return DensePayload(x)
+
+    def omega(self, d):
+        return 1.0
+
+    def wire_bits(self, d):
+        return 32 * d
+
+
+def _resolve_k(d: int, k: Optional[int], fraction: Optional[float]) -> int:
+    if k is not None:
+        return max(1, min(int(k), d))
+    return max(1, min(d, int(math.ceil(fraction * d))))
+
+
+class RandK(Compressor):
+    """rand_k sparsification: keep k uniformly random coordinates.  omega = k/d."""
+    name = "rand_k"
+    unbiased = False  # (unbiased after d/k rescaling; raw form is biased)
+
+    def __init__(self, k: Optional[int] = None, fraction: Optional[float] = None,
+                 rescale: bool = False):
+        assert (k is None) != (fraction is None)
+        self.k, self.fraction, self.rescale = k, fraction, rescale
+        self.unbiased = rescale
+
+    def compress(self, key, x):
+        d = x.size
+        k = _resolve_k(d, self.k, self.fraction)
+        idx = jax.random.permutation(key, d)[:k]
+        vals = x[idx]
+        if self.rescale:
+            vals = vals * (d / k)
+        return SparsePayload(vals, idx.astype(jnp.int32), d)
+
+    def omega(self, d):
+        k = _resolve_k(d, self.k, self.fraction)
+        if self.rescale:           # rescaled-unbiased: tau = d/k  ->  omega = k/d
+            return k / d
+        return k / d
+
+    def wire_bits(self, d):
+        return _resolve_k(d, self.k, self.fraction) * 64
+
+
+class TopK(Compressor):
+    """top_k sparsification: keep the k largest-magnitude coords.  omega = k/d.
+    Deterministic and *biased* — exactly the class CHOCO supports and
+    Q1-G/Q2-G/DCD/ECD do not."""
+    name = "top_k"
+    unbiased = False
+    stochastic = False
+
+    def __init__(self, k: Optional[int] = None, fraction: Optional[float] = None):
+        assert (k is None) != (fraction is None)
+        self.k, self.fraction = k, fraction
+
+    def compress(self, key, x):
+        d = x.size
+        k = _resolve_k(d, self.k, self.fraction)
+        vals, idx = jax.lax.top_k(jnp.abs(x), k)
+        return SparsePayload(x[idx], idx.astype(jnp.int32), d)
+
+    def omega(self, d):
+        return _resolve_k(d, self.k, self.fraction) / d
+
+    def wire_bits(self, d):
+        return _resolve_k(d, self.k, self.fraction) * 64
+
+
+class QSGD(Compressor):
+    """qsgd_s random quantization (Alistarh et al. 2017), *rescaled by 1/tau*
+    so that (7) holds with omega = 1/tau, tau = 1 + min(d/s^2, sqrt(d)/s).
+
+        qsgd_s(x) = sign(x) * ||x|| / (s*tau) * floor(s |x| / ||x|| + xi)
+
+    Wire format: int codes in [-s, s] + one f32 scale -> ceil(log2(2s+1))+1
+    bits per coordinate.
+    """
+    name = "qsgd"
+    unbiased = False   # rescaled version is biased (contraction), raw is unbiased
+
+    def __init__(self, s: int, rescale: bool = True):
+        self.s = int(s)
+        self.rescale = rescale
+        self.unbiased = not rescale
+
+    def _tau(self, d):
+        s = self.s
+        return 1.0 + min(d / (s * s), math.sqrt(d) / s)
+
+    def compress(self, key, x):
+        d = x.size
+        s = self.s
+        norm = jnp.linalg.norm(x)
+        xi = jax.random.uniform(key, x.shape)
+        level = jnp.floor(s * jnp.abs(x) / jnp.where(norm == 0, 1.0, norm) + xi)
+        codes = jnp.sign(x) * level                      # in [-s, s]
+        tau = self._tau(d) if self.rescale else 1.0
+        scale = norm / (s * tau)
+        bits = int(math.ceil(math.log2(2 * s + 1))) + 1
+        # wire format: int8 for s <= 127, int16 above — NOT int32 (an int32
+        # code stream is *larger* than the raw bf16 vector; caught by the
+        # compiled-HLO wire audit, EXPERIMENTS.md §Perf A)
+        ctype = jnp.int8 if s <= 127 else jnp.int16
+        return QuantPayload(codes.astype(ctype), scale.astype(jnp.float32), bits)
+
+    def omega(self, d):
+        return 1.0 / self._tau(d)
+
+    def wire_bits(self, d):
+        # paper §5.1 accounting: log2(s) bits per coordinate (s=2^4 -> 4 bits,
+        # s=2^8 -> 8 bits) + one f32 norm
+        return d * int(math.ceil(math.log2(self.s))) + 32
+
+
+class SignNorm(Compressor):
+    """Scaled sign: Q(x) = ||x||_1 / d * sign(x).  Biased;
+    ||Q(x)-x||^2 = ||x||^2 - ||x||_1^2/d  =>  omega >= 1/d (worst case),
+    typically ~2/pi for Gaussian-like x."""
+    name = "sign"
+    unbiased = False
+    stochastic = False
+
+    def compress(self, key, x):
+        d = x.size
+        scale = jnp.sum(jnp.abs(x)) / d
+        codes = jnp.sign(x)
+        return QuantPayload(codes.astype(jnp.int32), scale.astype(jnp.float32), 1)
+
+    def omega(self, d):
+        return 1.0 / d
+
+    def wire_bits(self, d):
+        return d + 32
+
+
+class RandomizedGossip(Compressor):
+    """Q(x) = x with prob p else 0.  omega = p  (paper §3.5)."""
+    name = "randomized_gossip"
+    unbiased = False
+
+    def __init__(self, p: float):
+        self.p = float(p)
+
+    def compress(self, key, x):
+        keep = jax.random.bernoulli(key, self.p)
+        return DensePayload(jnp.where(keep, x, jnp.zeros_like(x)))
+
+    def omega(self, d):
+        return self.p
+
+    def wire_bits(self, d):
+        return int(32 * d * self.p)
+
+
+_REGISTRY = {
+    "identity": lambda **kw: Identity(),
+    "rand_k": lambda **kw: RandK(**kw),
+    "top_k": lambda **kw: TopK(**kw),
+    "qsgd": lambda **kw: QSGD(**kw),
+    "sign": lambda **kw: SignNorm(),
+    "randomized_gossip": lambda **kw: RandomizedGossip(**kw),
+}
+
+
+def make_compressor(name: str, **kwargs) -> Compressor:
+    """Factory: make_compressor('top_k', fraction=0.01)."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def compress_pytree(compressor: Compressor, key, tree):
+    """Compress every leaf of a pytree (flattened per-leaf)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = (jax.random.split(key, len(leaves)) if compressor.stochastic
+            else [None] * len(leaves))
+    payloads = [compressor.compress(k, leaf.ravel()) for k, leaf in zip(keys, leaves)]
+    return payloads, treedef
+
+
+def decompress_pytree(payloads, treedef, shapes):
+    leaves = [p.dense().reshape(s) for p, s in zip(payloads, shapes)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)

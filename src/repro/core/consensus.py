@@ -1,0 +1,55 @@
+"""Blackbox averaging interface (paper Algorithm 4 / Assumption 3).
+
+An averaging scheme is a map  h: (X, Y) -> (X', Y')  that
+  (i)  preserves the average of X, and
+  (ii) contracts the Lyapunov function
+       Psi(X, Y) = ||X - Xbar||_F^2 + ||X - Y||_F^2  by (1 - p).
+
+Exact gossip satisfies it with p = gamma * delta; CHOCO-Gossip with
+p = delta^2 omega / 82 (Theorem 2).  Decentralized SGD with *any* such h
+converges per Theorem 19 — this is the composition point of the framework:
+plug a new averaging scheme here and the trainer/benchmarks pick it up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compression import Compressor, Identity
+from .choco_gossip import _rowwise_compress, theorem2_stepsize, theorem2_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class AveragingScheme:
+    """h(X, Y, key) -> (X', Y') plus its contraction parameter p."""
+    name: str
+    h: Callable[[jax.Array, jax.Array, Optional[jax.Array]],
+                Tuple[jax.Array, jax.Array]]
+    p: float
+
+
+def exact_averaging(W: jax.Array, delta: float, gamma: float = 1.0) -> AveragingScheme:
+    def h(X, Y, key=None):
+        Xn = X + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ X
+        return Xn, Xn
+    return AveragingScheme("exact", h, p=gamma * delta)
+
+
+def choco_averaging(W: jax.Array, delta: float, beta: float,
+                    compressor: Compressor, d: int,
+                    gamma: Optional[float] = None) -> AveragingScheme:
+    omega = compressor.omega(d)
+    if gamma is None:
+        gamma = theorem2_stepsize(delta, beta, omega)
+
+    def h(X, Y, key=None):
+        # Y plays the role of Xhat
+        q = _rowwise_compress(compressor, key, X - Y)
+        Yn = Y + q
+        Xn = X + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ Yn
+        return Xn, Yn
+
+    return AveragingScheme("choco", h, p=1.0 - theorem2_rate(delta, omega))

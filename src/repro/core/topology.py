@@ -1,0 +1,144 @@
+"""Gossip graph topologies and mixing matrices W  (paper Def. 1, Table 1).
+
+W must be symmetric, doubly stochastic, with spectral gap
+delta = 1 - |lambda_2(W)| in (0, 1].  We build the paper's uniform-averaging
+matrices (w_ij = 1/(deg+1) for regular graphs, Metropolis-Hastings otherwise)
+and expose delta, rho = 1 - delta, beta = ||I - W||_2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    W: np.ndarray                 # (n, n) mixing matrix
+    neighbors: Tuple[Tuple[int, ...], ...]   # adjacency incl. self
+
+    @property
+    def n(self) -> int:
+        return self.W.shape[0]
+
+    @property
+    def delta(self) -> float:
+        """Spectral gap 1 - |lambda_2|."""
+        eig = np.sort(np.abs(np.linalg.eigvalsh(self.W)))[::-1]
+        return float(1.0 - (eig[1] if len(eig) > 1 else 0.0))
+
+    @property
+    def rho(self) -> float:
+        return 1.0 - self.delta
+
+    @property
+    def beta(self) -> float:
+        """||I - W||_2."""
+        return float(np.linalg.norm(np.eye(self.n) - self.W, ord=2))
+
+    def validate(self, atol=1e-10):
+        W = self.W
+        assert np.allclose(W, W.T, atol=atol), "W not symmetric"
+        assert np.allclose(W.sum(0), 1.0, atol=atol), "W not doubly stochastic"
+        assert np.all(W >= -atol), "W has negative entries"
+        return self
+
+
+def _from_adjacency(name: str, adj: np.ndarray) -> Topology:
+    """Uniform / Metropolis-Hastings weights from a 0/1 adjacency (no self-loops)."""
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    W = np.zeros((n, n))
+    for i in range(n):
+        for j in range(n):
+            if i != j and adj[i, j]:
+                W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    for i in range(n):
+        W[i, i] = 1.0 - W[i].sum()
+    nbrs = tuple(tuple(sorted(set(np.nonzero(adj[i])[0].tolist() + [i]))) for i in range(n))
+    return Topology(name, W, nbrs).validate()
+
+
+def ring(n: int) -> Topology:
+    """Ring; uniform averaging 1/3 (self + 2 neighbours).  delta = O(1/n^2)."""
+    adj = np.zeros((n, n), dtype=int)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[i, (i - 1) % n] = 1
+    if n == 1:
+        return Topology("ring", np.ones((1, 1)), ((0,),))
+    if n == 2:
+        W = np.array([[0.5, 0.5], [0.5, 0.5]])
+        return Topology("ring", W, ((0, 1), (0, 1))).validate()
+    return _from_adjacency("ring", adj)
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """2-d torus; uniform averaging 1/5.  delta = O(1/n)."""
+    n = rows * cols
+    adj = np.zeros((n, n), dtype=int)
+
+    def nid(r, c):
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = nid(r, c)
+            for (dr, dc) in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                adj[i, nid(r + dr, c + dc)] = 1
+    np.fill_diagonal(adj, 0)
+    return _from_adjacency("torus2d", adj)
+
+
+def fully_connected(n: int) -> Topology:
+    """Complete graph, W = (1/n) 11^T.  delta = 1."""
+    W = np.full((n, n), 1.0 / n)
+    nbrs = tuple(tuple(range(n)) for _ in range(n))
+    return Topology("fully_connected", W, nbrs).validate()
+
+
+def chain(n: int) -> Topology:
+    adj = np.zeros((n, n), dtype=int)
+    for i in range(n - 1):
+        adj[i, i + 1] = adj[i + 1, i] = 1
+    return _from_adjacency("chain", adj)
+
+
+def star(n: int) -> Topology:
+    adj = np.zeros((n, n), dtype=int)
+    adj[0, 1:] = adj[1:, 0] = 1
+    return _from_adjacency("star", adj)
+
+
+def hypercube(n: int) -> Topology:
+    m = int(np.log2(n))
+    assert 2 ** m == n, "hypercube needs n = 2^m"
+    adj = np.zeros((n, n), dtype=int)
+    for i in range(n):
+        for b in range(m):
+            adj[i, i ^ (1 << b)] = 1
+    return _from_adjacency("hypercube", adj)
+
+
+_TOPOLOGIES = {
+    "ring": lambda n: ring(n),
+    "torus": lambda n: torus2d(*_square_factors(n)),
+    "fully_connected": lambda n: fully_connected(n),
+    "chain": lambda n: chain(n),
+    "star": lambda n: star(n),
+    "hypercube": lambda n: hypercube(n),
+}
+
+
+def _square_factors(n: int) -> Tuple[int, int]:
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def make_topology(name: str, n: int) -> Topology:
+    if name not in _TOPOLOGIES:
+        raise ValueError(f"unknown topology {name!r}; have {sorted(_TOPOLOGIES)}")
+    return _TOPOLOGIES[name](n)

@@ -1,0 +1,170 @@
+"""Synthetic data pipelines.
+
+Two families:
+  * Token streams for LM training (per-node shards; `sorted` vs `shuffled`
+    assignment mirrors the paper's hardest/easiest heterogeneity settings).
+  * Logistic-regression datasets with the shape/density statistics of the
+    paper's *epsilon* (dense d=2000) and *rcv1* (sparse d=47236) benchmarks —
+    the container is offline, so the data is generated, not downloaded
+    (documented deviation in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# LM token streams
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TokenStream:
+    """Synthetic Zipf-distributed token stream, shardable across gossip nodes.
+
+    `heterogeneity`: 0.0 = iid across nodes (randomly shuffled);
+    1.0 = fully sorted (each node samples a disjoint vocabulary slice) —
+    the paper's `sorted` setting where decentralized averaging matters most.
+    """
+    vocab_size: int
+    seq_len: int
+    batch_per_node: int
+    n_nodes: int
+    heterogeneity: float = 0.0
+    seed: int = 0
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        ranks = np.arange(1, V + 1)
+        base_p = 1.0 / ranks
+        slice_size = V // self.n_nodes
+        while True:
+            toks = np.empty((self.n_nodes, self.batch_per_node, self.seq_len + 1),
+                            np.int32)
+            for i in range(self.n_nodes):
+                p = base_p.copy()
+                if self.heterogeneity > 0:
+                    mask = np.zeros(V)
+                    mask[i * slice_size:(i + 1) * slice_size] = 1.0
+                    p = p * ((1 - self.heterogeneity) + self.heterogeneity * V * mask)
+                p = p / p.sum()
+                toks[i] = rng.choice(V, size=(self.batch_per_node, self.seq_len + 1),
+                                     p=p).astype(np.int32)
+            yield {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+
+def make_lm_batch_fn(cfg: ModelConfig, seq_len: int, batch_per_node: int,
+                     n_nodes: int, heterogeneity: float = 0.0, seed: int = 0):
+    """Returns next_batch() -> pytree of np arrays matching train_batch_specs."""
+    if cfg.family == "audio":
+        rng = np.random.default_rng(seed)
+        fe = cfg.frontend
+
+        def next_batch():
+            S = seq_len
+            emb = rng.standard_normal(
+                (n_nodes, batch_per_node, S, fe.embed_dim)).astype(np.float32)
+            tgt = rng.integers(0, cfg.vocab_size,
+                               (n_nodes, batch_per_node, S)).astype(np.int32)
+            mask = (rng.random((n_nodes, batch_per_node, S)) < 0.08).astype(np.float32)
+            return {"frame_embeds": emb, "targets": tgt, "mask": mask}
+        return next_batch
+
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(seed)
+        fe = cfg.frontend
+        text = seq_len - fe.n_tokens
+        stream = iter(TokenStream(cfg.vocab_size, text - 1, batch_per_node,
+                                  n_nodes, heterogeneity, seed))
+
+        def next_batch():
+            b = next(stream)
+            emb = rng.standard_normal(
+                (n_nodes, batch_per_node, fe.n_tokens, fe.embed_dim)).astype(np.float32)
+            return {"patch_embeds": emb,
+                    "tokens": np.concatenate([b["tokens"], b["labels"][..., -1:]], -1),
+                    "labels": np.concatenate([b["labels"], b["labels"][..., -1:]], -1)}
+        return next_batch
+
+    stream = iter(TokenStream(cfg.vocab_size, seq_len, batch_per_node,
+                              n_nodes, heterogeneity, seed))
+    return lambda: next(stream)
+
+
+# ---------------------------------------------------------------------------
+# logistic regression (paper §5.3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LogRegProblem:
+    A: jax.Array          # (m, d) features
+    b: jax.Array          # (m,) labels in {-1, +1}
+    node_index: jax.Array  # (n_nodes, m_per_node) sample ids per node
+    reg: float
+
+    @property
+    def d(self) -> int:
+        return self.A.shape[1]
+
+    def full_loss(self, x):
+        z = self.b * (self.A @ x)
+        return jnp.mean(jnp.log1p(jnp.exp(-z))) + 0.5 * self.reg * jnp.sum(x * x)
+
+    def make_grad_fn(self, batch_size: int = 1):
+        """grad_fn(x_row, node_id, key) — samples a minibatch from the node's
+        shard (matches Algorithm 2 line 2)."""
+        A, b, idx = self.A, self.b, self.node_index
+        m_per = idx.shape[1]
+        reg = self.reg
+
+        def grad_fn(x, node, key):
+            j = jax.random.randint(key, (batch_size,), 0, m_per)
+            rows = idx[node, j]
+            a = A[rows]                                   # (bs, d)
+            bb = b[rows]
+            z = bb * (a @ x)
+            g = -(bb * jax.nn.sigmoid(-z))[:, None] * a   # dlog1p(exp(-z))/dx
+            return jnp.mean(g, axis=0) + reg * x
+        return grad_fn
+
+
+def make_logreg(name: str, n_nodes: int, *, sorted_assignment: bool = False,
+                seed: int = 0, m: Optional[int] = None,
+                d: Optional[int] = None) -> LogRegProblem:
+    """Synthetic stand-ins matched to the paper's dataset statistics:
+    epsilon: m=400k (reduced default 8k), d=2000, dense.
+    rcv1:    m=20242 (reduced default 8k), d=47236 (reduced 4724), 0.15% dense.
+    """
+    rng = np.random.default_rng(seed)
+    if name == "epsilon":
+        m = m or 8_000
+        d = d or 2_000
+        density = 1.0
+    elif name == "rcv1":
+        m = m or 8_000
+        d = d or 4_724
+        density = 0.0015 * 10       # keep ~7 nnz/row at reduced d
+    else:
+        raise ValueError(name)
+    # w_true scaled so margins a_i . w are O(3) after row normalisation
+    w_true = rng.standard_normal(d) * 3.0
+    A = rng.standard_normal((m, d)).astype(np.float32)
+    if density < 1.0:
+        A *= (rng.random((m, d)) < density)
+        A *= 1.0 / np.sqrt(max(density, 1e-6))
+    A /= np.maximum(np.linalg.norm(A, axis=1, keepdims=True), 1e-8)   # row-normalised
+    logits = A @ w_true + 0.3 * rng.standard_normal(m)
+    b = np.where(logits > 0, 1.0, -1.0).astype(np.float32)
+
+    m_per = m // n_nodes
+    order = np.argsort(b) if sorted_assignment else rng.permutation(m)
+    node_index = order[: m_per * n_nodes].reshape(n_nodes, m_per)
+    return LogRegProblem(A=jnp.asarray(A), b=jnp.asarray(b),
+                         node_index=jnp.asarray(node_index), reg=1.0 / m)

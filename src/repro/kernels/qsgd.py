@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: qsgd_s stochastic quantization (paper §3.5).
+
+    q = sign(x) * floor(s |x| / ||x|| + xi),   xi ~ U[0,1)^d
+    dequant(q) = q * ||x|| / (s * tau)
+
+The global norm is a cheap jnp reduction; the kernel does the bandwidth-bound
+elementwise pass HBM->VMEM->HBM in (8, 128)-aligned tiles, emitting int8
+codes (s <= 127).  The uniform noise is passed in as an input so the pure-jnp
+oracle (ref.py) matches bit-exactly; a TPU-native variant would fuse
+pltpu.prng_random_bits instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+LANES = 128
+
+
+def _quant_kernel(x_ref, xi_ref, inv_norm_ref, s_ref, out_ref):
+    x = x_ref[...]
+    xi = xi_ref[...]
+    inv_norm = inv_norm_ref[0]
+    s = s_ref[0]
+    mag = jnp.abs(x) * inv_norm * s
+    level = jnp.floor(mag + xi)
+    level = jnp.clip(level, 0.0, 127.0)
+    out_ref[...] = (jnp.sign(x) * level).astype(jnp.int8)
+
+
+def _dequant_kernel(codes_ref, scale_ref, out_ref):
+    out_ref[...] = codes_ref[...].astype(jnp.float32) * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret", "block_rows"))
+def qsgd_quantize(x, xi, s: int, *, interpret: bool = True,
+                  block_rows: int = BLOCK_ROWS):
+    """x, xi: (R, 128) f32 tiles (R % block_rows == 0).
+    Returns (codes int8 (R,128), scale f32 scalar)."""
+    assert s <= 127, "int8 wire format requires s <= 127"
+    R, C = x.shape
+    assert C == LANES and R % block_rows == 0, (R, C)
+    norm = jnp.sqrt(jnp.sum(jnp.square(x)))
+    inv_norm = jnp.where(norm == 0, 0.0, 1.0 / norm)
+    grid = (R // block_rows,)
+    codes = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),     # scalars broadcast to every tile
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANES), jnp.int8),
+        interpret=interpret,
+    )(x, xi, jnp.stack([inv_norm]), jnp.full((1,), float(s), jnp.float32))
+    import math
+    d = R * C
+    tau = 1.0 + min(d / (s * s), math.sqrt(d) / s)
+    scale = norm / (s * tau)
+    return codes, scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def qsgd_dequantize(codes, scale, *, interpret: bool = True,
+                    block_rows: int = BLOCK_ROWS):
+    R, C = codes.shape
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANES), jnp.float32),
+        interpret=interpret,
+    )(codes, jnp.stack([scale]))

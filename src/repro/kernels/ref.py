@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (exact same math, no tiling)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# -- qsgd ---------------------------------------------------------------------
+
+def qsgd_quantize_ref(x, xi, s: int):
+    norm = jnp.sqrt(jnp.sum(jnp.square(x)))
+    inv_norm = jnp.where(norm == 0, 0.0, 1.0 / norm)
+    level = jnp.clip(jnp.floor(jnp.abs(x) * inv_norm * s + xi), 0.0, 127.0)
+    codes = (jnp.sign(x) * level).astype(jnp.int8)
+    d = x.size
+    tau = 1.0 + min(d / (s * s), math.sqrt(d) / s)
+    return codes, (norm / (s * tau)).astype(jnp.float32)
+
+
+def qsgd_dequantize_ref(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+# -- block top-k --------------------------------------------------------------
+
+def block_topk_mask_ref(x, k: int, n_iter: int = 24):
+    """Per-row (block) top-k selection mask via threshold bisection.
+    x: (R, C).  Returns (mask f32 (R,C), thresholds (R,)).
+
+    Bisection converges to a magnitude threshold t per row such that
+    count(|x| >= t) >= k with the tightest representable t; ties may admit a
+    few extra elements (documented operator semantics: count in [k, k+ties))."""
+    mag = jnp.abs(x)
+    lo = jnp.zeros((x.shape[0],), jnp.float32)
+    hi = jnp.max(mag, axis=1) + 1e-12
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(mag >= mid[:, None], axis=1)
+        ge = cnt >= k
+        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    mask = (mag >= lo[:, None]).astype(jnp.float32)
+    return mask, lo
+
+
+# -- fused error-feedback gossip update ---------------------------------------
+
+def ef_gossip_update_ref(x_half, x_hat, s, q_self, q_nbr, w_self, w_nbr, gamma):
+    """CHOCO state update (Algorithm 6 lines 8-10), fused:
+        x_hat' = x_hat + q_self
+        s'     = s + w_self * q_self + w_nbr * q_nbr
+        x'     = x_half + gamma * (s' - x_hat')
+    All arrays same shape; q_nbr is the (already summed) neighbour payload."""
+    x_hat_n = x_hat + q_self
+    s_n = s + w_self * q_self + w_nbr * q_nbr
+    x_n = x_half + gamma * (s_n - x_hat_n)
+    return x_n, x_hat_n, s_n
+
+
+# -- flash attention -----------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        softcap: float | None = None):
+    """q,k,v: (B, S, H, Dh) -> (B, S, H, Dh), plain softmax attention oracle."""
+    Dh = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(Dh)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)

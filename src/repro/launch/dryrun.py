@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
+combination against the production mesh, print memory/cost analysis and the
+roofline terms.  No real allocation: all inputs are ShapeDtypeStructs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (get_config, ARCH_IDS, INPUT_SHAPES, ChocoConfig)
+from repro.models import build_model
+from repro.train.trainer import DecentralizedTrainer
+from repro.optim import sgd, constant_schedule
+from repro.launch.mesh import make_production_mesh, gossip_axis_for
+from repro.launch import specs as S
+from repro.launch.sharding import param_pspecs, batch_pspecs, cache_pspecs
+from repro.analysis.roofline import (analyze, model_flops_for, Roofline,
+                                     parse_collectives)
+
+
+def parse_collectives_from(compiled, n_devices):
+    return parse_collectives(compiled.as_text(), n_devices)
+
+
+def _shard(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_train(cfg, shape, mesh, mode: str = "choco",
+                compressor: str = "top_k", comp_kwargs=(("fraction", 0.01),),
+                state_dtype: str = "float32", topology: str = "ring"):
+    gossip_axis = gossip_axis_for(mesh)
+    n_nodes = mesh.shape[gossip_axis]
+    if topology == "torus" and "pod" in mesh.axis_names:
+        n_nodes = mesh.shape["pod"] * mesh.shape["data"]
+    model = build_model(cfg)
+    ccfg = ChocoConfig(compressor=compressor, comp_kwargs=tuple(comp_kwargs),
+                       gossip_axis=gossip_axis, state_dtype=state_dtype,
+                       topology=topology)
+    tr = DecentralizedTrainer(model=model, choco=ccfg, mesh=mesh,
+                              n_nodes=n_nodes, optimizer=sgd(),
+                              lr_fn=constant_schedule(1e-2), mode=mode)
+    state_shape = tr.state_shape()
+    batch_shape = S.train_batch_specs(cfg, shape, n_nodes)
+    jitted = tr.jitted_train_step(state_shape, batch_shape)
+    info = {"arg_shapes": (state_shape, batch_shape),
+            "arg_specs": (tr.state_pspecs(state_shape),
+                          batch_pspecs(
+                              batch_shape, node_axis=tr.gossip_axis, dp_axis=tr.fsdp_axis))}
+    return jitted.lower(state_shape, batch_shape), info
+
+
+def lower_prefill(cfg, shape, mesh, seq_shard: bool = False):
+    model = build_model(cfg)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg,
+                          node_axis=None, fsdp_axis=dp[0] if cfg.family == "moe" else None,
+                          model_size=0)
+    batch_shape = S.prefill_batch_specs(cfg, shape)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if seq_shard:
+        # sequence parallelism: tokens (B, S) sharded (data, model) so the
+        # FFN/MoE activations never need a full-width all-reduce
+        bspecs = jax.tree.map(
+            lambda l: P(dpa, "model") if l.ndim == 2 else P(dpa, "model", None),
+            batch_shape)
+    else:
+        bspecs = batch_pspecs(batch_shape, node_axis=None, dp_axis=dpa)
+
+    def prefill_step(params, batch):
+        logits, caches = model.prefill(params, batch)
+        return logits
+
+    fn = jax.jit(prefill_step,
+                 in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs)))
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    info = {"arg_shapes": (params_shape, batch_shape),
+            "arg_specs": (pspecs, bspecs)}
+    return fn.lower(params_shape, batch_shape), info
+
+
+def lower_decode(cfg, shape, mesh, kv_layout: str = "auto"):
+    model = build_model(cfg)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(params_shape, cfg, node_axis=None,
+                          fsdp_axis=dp[0] if cfg.family == "moe" else None,
+                          model_size=0)
+    dec = S.decode_specs(cfg, shape, model)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cspecs = cache_pspecs(dec["caches"], cfg, batch=shape.global_batch,
+                          dp_axes=dp, mesh_shape=mesh_shape,
+                          kv_layout=kv_layout)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh_shape[a]
+    batch_ok = shape.global_batch % dp_total == 0 and shape.global_batch >= dp_total
+    tok_spec = P(dp if len(dp) > 1 else dp[0], None) if batch_ok else P(None, None)
+    pos_spec = P(dp if len(dp) > 1 else dp[0]) if batch_ok else P(None)
+
+    def serve_step(params, token, caches, pos):
+        logits, new_caches = model.decode_step(params, token, caches, pos)
+        return logits, new_caches
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(_shard(mesh, pspecs),
+                               NamedSharding(mesh, tok_spec),
+                               _shard(mesh, cspecs),
+                               NamedSharding(mesh, pos_spec)))
+    info = {"arg_shapes": (params_shape, dec["caches"]),
+            "arg_specs": (pspecs, cspecs)}
+    return fn.lower(params_shape, dec["token"], dec["caches"], dec["pos"]), info
+
+
+def lower_one(arch: str, shape_name: str, mesh, mode: str = "choco",
+              compressor: str = "top_k", comp_kwargs=(("fraction", 0.01),),
+              unroll: bool = True, overrides: Optional[Dict[str, Any]] = None,
+              kv_layout: str = "auto", state_dtype: str = "float32",
+              topology: str = "ring"):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if unroll:
+        cfg = _dc.replace(cfg, scan_unroll=True)
+    if overrides:
+        cfg_overrides = {k: v for k, v in overrides.items() if not k.startswith("_")}
+        if cfg_overrides:
+            cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    skip = S.applicability(cfg, shape)
+    if skip:
+        return None, skip, None
+    if shape.kind == "train":
+        lowered, info = lower_train(cfg, shape, mesh, mode, compressor,
+                                    comp_kwargs, state_dtype=state_dtype,
+                                    topology=topology)
+    elif shape.kind == "prefill":
+        lowered, info = lower_prefill(cfg, shape, mesh,
+                                      seq_shard=bool((overrides or {}).get("_seq_shard", False)))
+    else:
+        lowered, info = lower_decode(cfg, shape, mesh, kv_layout=kv_layout)
+    return lowered, None, info
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, mode: str = "choco",
+            compressor: str = "top_k", comp_kwargs=(("fraction", 0.01),),
+            verbose: bool = True, skip_roofline: bool = False,
+            overrides: Optional[Dict[str, Any]] = None,
+            kv_layout: str = "auto", state_dtype: str = "float32",
+            topology: str = "ring") -> Dict[str, Any]:
+    """One (arch x shape x mesh) dry-run.
+
+    Phase A (the compile proof): the production config with the layer stack as
+    lax.scan — compile must succeed; memory_analysis comes from this module
+    (realistic buffer reuse).
+
+    Phase B (roofline terms): two small *unrolled* variants with repeat=1 and
+    repeat=2 of the block pattern; every cost term is linear in the repeat
+    count, so  cost(L) = base + units * delta  with delta = cost(2)-cost(1)
+    gives exact full-depth HLO flops / bytes / collective bytes without
+    compiling a 48-layer unrolled SPMD module.
+    """
+    from repro.models.transformer import block_pattern
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.size
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)), "mode": mode,
+    }
+    t0 = time.time()
+    try:
+        # ---- Phase A: full-config compile proof (scan) --------------------
+        lowered, skip, info = lower_one(arch, shape_name, mesh, mode, compressor,
+                                        comp_kwargs, unroll=False,
+                                        overrides=overrides, kv_layout=kv_layout,
+                                        state_dtype=state_dtype, topology=topology)
+        if skip:
+            rec["status"] = "skip"
+            rec["reason"] = skip
+            if verbose:
+                print(f"[skip] {arch} x {shape_name}: {skip}", flush=True)
+            return rec
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        from repro.launch.sharding import bytes_per_device
+        rec["memory"]["analytic_arg_bytes_per_device"] = int(sum(
+            bytes_per_device(sh, sp, mesh)
+            for sh, sp in zip(info["arg_shapes"], info["arg_specs"])))
+        stats_full = parse_collectives_from(compiled, n_devices)
+        rec["collectives_scan_module"] = {"counts": stats_full.counts}
+        rec["status"] = "ok"
+
+        # ---- Phase B: per-layer-unit cost extrapolation --------------------
+        if not skip_roofline:
+            pattern, repeat, tail = block_pattern(cfg)
+            unit = len(pattern)
+            units_eff = cfg.n_layers / unit          # fractional for tail archs
+            costs = []
+            for r in (1, 2):
+                ovr = dict(overrides or {})
+                ovr["n_layers"] = unit * r
+                if cfg.hybrid is not None:           # keep pattern identical
+                    pass
+                low_r, _, _ = lower_one(arch, shape_name, mesh, mode, compressor,
+                                        comp_kwargs, unroll=True, overrides=ovr,
+                                        kv_layout=kv_layout,
+                                        state_dtype=state_dtype, topology=topology)
+                comp_r = low_r.compile()
+                rl_r, st_r = analyze(comp_r, n_devices=n_devices, model_flops=1.0)
+                costs.append({
+                    "flops": rl_r.flops, "bytes": rl_r.bytes_accessed,
+                    "wire": rl_r.wire_bytes, "wire_by_kind": st_r.wire_bytes,
+                    "counts": st_r.counts,
+                })
+            delta = {k: costs[1][k] - costs[0][k] for k in ("flops", "bytes", "wire")}
+            base = {k: costs[0][k] - delta[k] for k in delta}
+            full = {k: max(base[k] + units_eff * delta[k], 0.0) for k in delta}
+            rl = Roofline(flops=full["flops"], bytes_accessed=full["bytes"],
+                          wire_bytes=full["wire"], n_devices=n_devices,
+                          model_flops=model_flops_for(cfg, shape))
+            rec["roofline"] = rl.row()
+            rec["per_unit"] = {"delta": delta, "base": base, "units_eff": units_eff}
+            wire_kind = {}
+            for k in costs[1]["wire_by_kind"]:
+                d = costs[1]["wire_by_kind"][k] - costs[0]["wire_by_kind"][k]
+                b = costs[0]["wire_by_kind"][k] - d
+                wire_kind[k] = max(b + units_eff * d, 0.0)
+            rec["collectives"] = {"wire_bytes_extrapolated": wire_kind,
+                                  "counts_unit2": costs[1]["counts"]}
+        rec["total_s"] = round(time.time() - t0, 1)
+        if verbose:
+            print(f"[ok]   {arch} x {shape_name} ({rec['mesh']}, {mode}) "
+                  f"compile={rec['compile_s']}s total={rec['total_s']}s", flush=True)
+            print(f"       memory: {rec['memory']}", flush=True)
+            if "roofline" in rec:
+                r = rec["roofline"]
+                print(f"       roofline: compute={r['compute_s']:.4f}s "
+                      f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.6f}s "
+                      f"dominant={r['dominant']} "
+                      f"useful={r['useful_ratio'] and round(r['useful_ratio'], 3)}", flush=True)
+    except Exception as e:  # noqa: BLE001 - dry-run reports failures as data
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+        if verbose:
+            print(f"[FAIL] {arch} x {shape_name}: {rec['error']}", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="choco", choices=["choco", "plain", "allreduce"])
+    ap.add_argument("--compressor", default="top_k")
+    ap.add_argument("--fraction", type=float, default=0.01)
+    ap.add_argument("--qsgd-s", type=int, default=None)
+    ap.add_argument("--json", default=None, help="append records to this JSON-lines file")
+    ap.add_argument("--kv-layout", default="auto", choices=["auto", "head", "seq"])
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--topology", default="ring", choices=["ring", "torus"])
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. attn_impl=chunked)")
+    args = ap.parse_args(argv)
+
+    comp_kwargs = (("s", args.qsgd_s),) if args.qsgd_s else (("fraction", args.fraction),)
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    records = []
+    for arch, shp in combos:
+        rec = run_one(arch, shp, multi_pod=args.multi_pod, mode=args.mode,
+                      compressor=args.compressor, comp_kwargs=comp_kwargs,
+                      overrides=overrides or None, kv_layout=args.kv_layout,
+                      state_dtype=args.state_dtype, topology=args.topology)
+        records.append(rec)
+        if args.json:
+            with open(args.json, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    n_fail = sum(r["status"] == "fail" for r in records)
+    print(f"\n== {len(records)} combos: "
+          f"{sum(r['status']=='ok' for r in records)} ok, "
+          f"{sum(r['status']=='skip' for r in records)} skip, {n_fail} fail ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

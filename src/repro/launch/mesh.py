@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run launcher sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (tests / examples use small CPU meshes)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_nodes: int = 1):
+    """Degenerate single-host mesh for CPU smoke tests: (n_nodes, 1)."""
+    n = len(jax.devices())
+    assert n % n_nodes == 0, f"{n} devices not divisible by {n_nodes} nodes"
+    return jax.make_mesh((n_nodes, n // n_nodes), ("data", "model"))
+
+
+def gossip_axis_for(mesh) -> str:
+    """Default gossip placement: 'pod' when present, else 'data'."""
+    return "pod" if "pod" in mesh.axis_names else "data"

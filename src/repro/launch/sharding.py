@@ -1,0 +1,231 @@
+"""Sharding rules: map every parameter / state / batch leaf to a
+PartitionSpec.
+
+Layout summary (single-pod mesh (data=16, model=16)):
+  * gossip node axis  = "data"  (leading dim of every decentralized leaf)
+  * tensor parallel   = "model" (attention heads, FFN hidden, experts, vocab)
+Multi-pod mesh (pod=2, data=16, model=16):
+  * gossip node axis  = "pod"
+  * FSDP              = "data"  (the non-model matrix dim of big weights)
+  * tensor parallel   = "model"
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# leaf names -> how the *trailing* (block-level) dims shard.
+#   "col": 2D (in, out) -> out over model          e.g. wq, w_up
+#   "row": 2D (in, out) -> in  over model          e.g. wo, w_down
+#   "expert": 3D (E, in, out) -> E over model
+#   "vocab_in": (V, D) -> V over model
+#   "repl": replicated
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w_x", "w_z", "unembed",
+        "in_proj", "w1", "w2", "w_g"}
+_COL_NOFSDP = {"conv_x"}        # tiny first dim (d_conv): never FSDP-shard
+_ROW = {"wo", "w_down", "w_out", "w_o"}
+_VOCAB = {"tok"}
+
+
+def _base_kind(path_names: Tuple[str, ...], leaf: jax.ShapeDtypeStruct) -> str:
+    name = path_names[-1]
+    parents = set(path_names[:-1])
+    if "moe" in parents and "shared" not in parents \
+            and name in ("w_gate", "w_up", "w_down"):
+        return "expert"
+    if "cm" in parents:           # rwkv channel-mix
+        return {"w_k": "col", "w_v": "row", "w_r": "repl"}.get(name, "repl")
+    if "tm" in parents:           # rwkv time-mix
+        if name in ("w_r", "w_k", "w_v", "w_g"):
+            return "col"
+        if name == "w_o":
+            return "row"
+        return "repl"
+    if name == "head":            # audio class head (504 classes: tiny, repl)
+        return "repl"
+    if name in _COL:
+        return "col"
+    if name in _COL_NOFSDP:
+        return "col_nofsdp"
+    if name in _ROW:
+        return "row"
+    if name in _VOCAB:
+        return "vocab_in"
+    return "repl"
+
+
+def _trailing_spec(kind: str, model: str, fsdp: Optional[str]) -> Tuple:
+    if kind == "col":
+        return (fsdp, model)
+    if kind == "col_nofsdp":
+        return (None, model)
+    if kind == "row":
+        return (model, fsdp)
+    if kind == "expert":
+        return (model, fsdp, None)
+    if kind == "vocab_in":
+        return (model, fsdp)
+    return ()
+
+
+def param_pspecs(params_shape: Any, cfg: ModelConfig, *,
+                 node_axis: Optional[str], model_axis: str = "model",
+                 fsdp_axis: Optional[str] = None, model_size: int = 0):
+    """PartitionSpec pytree for a param(-like) pytree.
+
+    node_axis: mesh axis for the leading decentralized-node dim (None for
+    serving, where params have no node dim).
+    model_size: size of the model axis — KV projections whose head count does
+    not divide it are replicated (col-sharding them makes GSPMD insert
+    permute-reshards of k/v every layer; EXPERIMENTS.md §Perf A)."""
+    kv_shardable = model_size <= 0 or cfg.n_kv_heads % model_size == 0
+
+    def spec(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        kind = _base_kind(names, leaf)
+        if names[-1] in ("wk", "wv") and "attn" in names and not kv_shardable:
+            kind = "repl"
+        base = _trailing_spec(kind, model_axis, fsdp_axis)
+        lead = (node_axis,) if node_axis else ()
+        pad = leaf.ndim - len(lead) - len(base)
+        if pad < 0:      # scalar / vector leaves: drop the base
+            base = ()
+            pad = leaf.ndim - len(lead)
+        return P(*(lead + (None,) * pad + base))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def batch_pspecs(batch_shape: Any, *, node_axis: Optional[str],
+                 dp_axis: Optional[str] = None):
+    """Batch leaves: (node, B_local, ...) -> P(node, dp, None...)."""
+    def spec(leaf):
+        lead = []
+        if node_axis:
+            lead.append(node_axis)
+        if dp_axis and leaf.ndim > len(lead):
+            lead.append(dp_axis)
+        return P(*(tuple(lead) + (None,) * (leaf.ndim - len(lead))))
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_pspecs(cache_shape: Any, cfg: ModelConfig, *, batch: int,
+                 model_axis: str = "model", dp_axes: Tuple[str, ...] = ("data",),
+                 mesh_shape=None, kv_layout: str = "head"):
+    """KV/state caches for serving.
+
+    Layout: leading repeat/stack dim unsharded; batch dim over dp axes when it
+    divides, otherwise the long sequence dim shards over the dp axes
+    (sequence-parallel KV for long_500k); KV-head / SSM-head dims over model.
+    """
+    dp = tuple(a for a in dp_axes if a)
+
+    def total(axes):
+        t = 1
+        for a in axes:
+            t *= mesh_shape[a]
+        return t
+
+    batch_ok = mesh_shape is not None and batch % max(total(dp), 1) == 0 and batch >= total(dp)
+
+    def spec(path, leaf):
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        name = names[-1]
+        # stacked caches have a leading `repeat` dim when under "stack"
+        stacked = "stack" in names
+        lead = (None,) if stacked else ()
+        nd = leaf.ndim - len(lead)
+        if name in ("k", "v"):
+            msz = mesh_shape[model_axis] if mesh_shape else 1
+            bs = _maybe(dp, batch_ok)
+            layout = kv_layout
+            if layout == "auto":
+                # flash-decoding (seq) layout whenever the KV-head count does
+                # not divide the model axis — head-sharding then forces GSPMD
+                # to reshard the cache every layer (EXPERIMENTS.md §Perf C)
+                kv = leaf.shape[-2]
+                layout = "head" if kv % msz == 0 else "seq"
+            if layout == "seq":
+                # flash-decoding layout: cache length over the model axis;
+                # softmax/contraction reductions become tiny cross-shard ops
+                return P(*(lead + (bs, model_axis, None, None)))
+            # "head" layout: (B, C, KV, Dh) heads over model if divisible,
+            # else head_dim, else replicate across model
+            kv, dh = leaf.shape[-2], leaf.shape[-1]
+            if kv % msz == 0:
+                hspec = (model_axis, None)
+            elif dh % msz == 0:
+                hspec = (None, model_axis)
+            else:
+                hspec = (None, None)
+            cs = None if batch_ok else _maybe(dp, True)
+            return P(*(lead + (bs, cs) + hspec))
+        if name == "ssm":
+            # (B, H, N, P): batch over dp, heads over model
+            msz = mesh_shape[model_axis] if mesh_shape else 1
+            bs = _maybe(dp, batch_ok)
+            h = leaf.shape[-3]
+            hs = model_axis if h % msz == 0 else None
+            return P(*(lead + (bs, hs) + (None,) * (nd - 2)))
+        if name in ("conv_x",):
+            bs = _maybe(dp, batch_ok)
+            return P(*(lead + (bs, None, model_axis) + (None,) * (nd - 3)))
+        if name in ("conv_B", "conv_C"):
+            bs = _maybe(dp, batch_ok)
+            return P(*(lead + (bs,) + (None,) * (nd - 1)))
+        if name == "wkv":
+            # (B, H, P, P): heads over model if divisible, else first P dim
+            msz = mesh_shape[model_axis] if mesh_shape else 1
+            bs = _maybe(dp, batch_ok)
+            h, pdim = leaf.shape[-3], leaf.shape[-2]
+            if h % msz == 0:
+                hs = (model_axis, None, None)
+            elif pdim % msz == 0:
+                hs = (None, model_axis, None)
+            else:
+                hs = (None, None, None)
+            return P(*(lead + (bs,) + hs))
+        if name in ("shift_tm", "shift_cm"):
+            bs = _maybe(dp, batch_ok)
+            return P(*(lead + (bs,) + (None,) * (nd - 1)))
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def bytes_per_device(shapes_tree, specs_tree, mesh) -> int:
+    """Analytic per-device bytes for a pytree of ShapeDtypeStructs sharded by
+    the given PartitionSpecs (ground truth for the dry-run memory report —
+    CompiledMemoryStats argument accounting on the host backend is unreliable)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    leaves = jax.tree.leaves(shapes_tree)
+    specs = jax.tree.leaves(specs_tree, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for leaf, spec in zip(leaves, specs):
+        div = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                div *= sizes[a]
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize // div
+    return total
+
+
+def _maybe(dp, batch_ok):
+    if not batch_ok or not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _kv_spec(lead, nd, dp, batch_ok, model_axis):
+    """(B, C, KV, Dh): batch over dp when divisible, else cache length over dp."""
+    bs = _maybe(dp, batch_ok)
+    cs = None if batch_ok else _maybe(dp, True)
+    return P(*(lead + (bs, cs, model_axis) + (None,) * (nd - 3)))

@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct stand-ins for every model input x input-shape combination
+(no device allocation — used by the multi-pod dry-run and the trainers).
+
+Train batches carry a leading gossip-node dim; serve batches do not (CHOCO is
+a training technique; serving is plain sharded inference).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int) -> Dict[str, Any]:
+    assert shape.global_batch % n_nodes == 0, \
+        f"global_batch {shape.global_batch} % nodes {n_nodes}"
+    b = shape.global_batch // n_nodes
+    S = shape.seq_len
+    if cfg.family == "audio":
+        fe = cfg.frontend
+        return {
+            "frame_embeds": sds((n_nodes, b, S, fe.embed_dim), cfg.dtype),
+            "targets": sds((n_nodes, b, S), jnp.int32),
+            "mask": sds((n_nodes, b, S), jnp.float32),
+        }
+    if cfg.family == "vlm":
+        fe = cfg.frontend
+        text = S - fe.n_tokens
+        assert text > 0, f"seq {S} must exceed {fe.n_tokens} image tokens"
+        return {
+            "patch_embeds": sds((n_nodes, b, fe.n_tokens, fe.embed_dim), cfg.dtype),
+            "tokens": sds((n_nodes, b, text), jnp.int32),
+            "labels": sds((n_nodes, b, text), jnp.int32),
+        }
+    return {
+        "tokens": sds((n_nodes, b, S), jnp.int32),
+        "labels": sds((n_nodes, b, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        fe = cfg.frontend
+        return {"frame_embeds": sds((B, S, fe.embed_dim), cfg.dtype)}
+    if cfg.family == "vlm":
+        fe = cfg.frontend
+        return {"patch_embeds": sds((B, fe.n_tokens, fe.embed_dim), cfg.dtype),
+                "tokens": sds((B, S - fe.n_tokens), jnp.int32)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, model) -> Dict[str, Any]:
+    """serve_step inputs: one new token + a full-length cache."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "pos": sds((B,), jnp.int32),
+        "caches": caches,
+    }
+
+
+# ---------------------------------------------------------------------------
+# applicability matrix (skips are recorded, not silently dropped)
+# ---------------------------------------------------------------------------
+
+def applicability(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if the (arch, shape) pair runs; otherwise the skip reason."""
+    if cfg.family == "audio" and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode step exists"
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in ("ssm", "hybrid")
+            or (cfg.sliding_window is not None and cfg.local_global_pattern > 0))
+        if not sub_quadratic:
+            return "pure full-attention arch: long_500k requires sub-quadratic attention"
+    if cfg.family == "vlm" and shape.kind == "train" \
+            and shape.seq_len <= cfg.frontend.n_tokens:
+        return "sequence shorter than image-token budget"
+    return None

@@ -1,0 +1,114 @@
+"""Production training launcher.
+
+On a real TPU slice this runs under `python -m repro.launch.train` on every
+host (jax.distributed initialises from the TPU environment); on CPU it
+simulates the mesh with host devices for integration testing.
+
+    python -m repro.launch.train --arch qwen3-1.7b --shape train_4k \
+        --mode choco --compressor top_k --fraction 0.01 --steps 100
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--batch-per-node", type=int, default=None)
+    ap.add_argument("--mode", default="choco",
+                    choices=["choco", "plain", "allreduce"])
+    ap.add_argument("--compressor", default="top_k")
+    ap.add_argument("--fraction", type=float, default=0.01)
+    ap.add_argument("--qsgd-s", type=int, default=None)
+    ap.add_argument("--state-dtype", default="float32")
+    ap.add_argument("--optimizer", default="momentum")
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--heterogeneity", type=float, default=1.0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--simulate-devices", type=int, default=0,
+                    help=">0: simulate N host devices (CPU testing)")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 4x2 => (data=4, model=2); default: production")
+    args = ap.parse_args(argv)
+
+    if args.simulate_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.simulate_devices}")
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config, ChocoConfig
+    from repro.models import build_model
+    from repro.models.transformer import count_params
+    from repro.train.trainer import DecentralizedTrainer
+    from repro.optim import make_optimizer, cosine_schedule
+    from repro.data.synthetic import make_lm_batch_fn
+    from repro.launch.mesh import make_production_mesh, make_mesh, gossip_axis_for
+    from repro.checkpoint.checkpointing import save_pytree, restore_pytree
+
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+        mesh = make_mesh(dims, axes)
+    else:
+        mesh = make_production_mesh()
+    gossip_axis = gossip_axis_for(mesh)
+    n_nodes = mesh.shape[gossip_axis]
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    print(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"nodes={n_nodes} mode={args.mode}")
+
+    comp_kwargs = (("s", args.qsgd_s),) if args.qsgd_s else (("fraction", args.fraction),)
+    trainer = DecentralizedTrainer(
+        model=model,
+        choco=ChocoConfig(compressor=args.compressor, comp_kwargs=comp_kwargs,
+                          gossip_axis=gossip_axis, state_dtype=args.state_dtype),
+        mesh=mesh, n_nodes=n_nodes,
+        optimizer=make_optimizer(args.optimizer),
+        lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),
+                              total=args.steps),
+        mode=args.mode)
+
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    if args.resume:
+        state = restore_pytree(args.resume, jax.eval_shape(lambda: state))
+        print(f"[train] resumed from {args.resume} at step {int(state.step)}")
+
+    seq = args.seq_len or min(cfg.n_layers * 64, 512)
+    bpn = args.batch_per_node or 4
+    next_batch = make_lm_batch_fn(cfg, seq, bpn, n_nodes, args.heterogeneity)
+    batch0 = jax.tree.map(jnp.asarray, next_batch())
+    step_fn = trainer.jitted_train_step(jax.eval_shape(lambda: state),
+                                        jax.eval_shape(lambda: batch0))
+
+    t0 = time.time()
+    for i in range(args.steps):
+        state, mets = step_fn(state, jax.tree.map(jnp.asarray, next_batch()))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"[train] step {int(state.step):5d} "
+                  f"loss {float(mets['loss']):.4f} "
+                  f"lr {float(mets['lr']):.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+        if (args.checkpoint_dir and args.checkpoint_every
+                and (i + 1) % args.checkpoint_every == 0):
+            path = os.path.join(args.checkpoint_dir, f"step{int(state.step)}")
+            save_pytree(path, jax.device_get(state),
+                        metadata={"step": int(state.step), "arch": cfg.name})
+            print(f"[train] checkpointed {path}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1 @@
+from .transformer import Model, build_model, block_pattern

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD) block — chunked matmul formulation (Dao & Gu 2024), which is
+the TPU-native layout: intra-chunk work is MXU matmuls, only the inter-chunk
+recurrence is a short scan over S/chunk steps.
+
+Per head h with state N and head dim P:
+    h_t = a_t * h_{t-1} + b_t x_t^T        (h in R^{N x P},  a_t = exp(dt_t * A))
+    y_t = c_t^T h_t  + D x_t
+
+Projections are separate leaves (w_x / w_z / w_B / w_C / w_dt) so tensor
+parallelism can shard the inner dim (heads) of w_x/w_z over the `model` mesh
+axis while the small B/C/dt projections stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    di = s.expand * D
+    H = di // s.head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": dense_init(ks[0], (D, di), dtype=dtype),
+        "w_z": dense_init(ks[1], (D, di), dtype=dtype),
+        "w_B": dense_init(ks[2], (D, s.d_state), dtype=dtype),
+        "w_C": dense_init(ks[3], (D, s.d_state), dtype=dtype),
+        "w_dt": dense_init(ks[4], (D, H), dtype=dtype),
+        "conv_x": (jax.random.normal(ks[5], (s.d_conv, di)) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (s.d_conv, s.d_state)) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (s.d_conv, s.d_state)) * 0.1).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(jax.random.fold_in(ks[0], 7), (di, D), dtype=dtype),
+    }
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-triangular cumulative sums
+    L[i, j] = sum_{k=j+1..i} a_k  (i >= j), -inf above diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _causal_conv(x, w, d_conv: int):
+    """Depthwise causal conv.  x: (B, S, C), w: (d_conv, C)."""
+    S = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + S] * w[i][None, None, :] for i in range(d_conv))
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD.
+    x:  (B, S, H, P)    dt: (B, S, H)    A: (H,) negative decay rates
+    Bm: (B, S, N)       Cm: (B, S, N)    (B/C shared across heads, mamba2-style)
+    returns y: (B, S, H, P), final_state: (B, H, N, P)
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} % chunk {Q} != 0"
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    a = dtc * A[None, None, None, :]                 # (B,nc,Q,H) log-decay per step
+    a_cum = jnp.cumsum(a, axis=2)                    # within-chunk cumulative
+
+    # 1. intra-chunk (diagonal blocks):  y = (C B^T  *  decay  * causal) @ (dt x)
+    L = jnp.exp(_segsum(jnp.swapaxes(a, 2, 3)))      # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)       # (B,nc,Q,Q)
+    xdt = xc * dtc[..., None]                        # (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", CB, L, xdt)
+
+    # 2. chunk summary states: state_c = sum_t decay_to_end * B_t (dt x)_t
+    decay_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)             # (B,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_end, xdt)
+
+    # 3. inter-chunk recurrence (scan over nc chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                    # (B,nc,H)
+
+    def scan_body(h, inp):
+        st, dec = inp                                # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                              # emit state *entering* the chunk
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    final, h_in = jax.lax.scan(
+        scan_body, h0,
+        (jnp.swapaxes(states, 0, 1).astype(jnp.float32),
+         jnp.swapaxes(chunk_decay, 0, 1).astype(jnp.float32)))
+    h_in = jnp.swapaxes(h_in, 0, 1)                  # (B,nc,H,N,P)
+
+    # 4. inter-chunk contribution: y += C_t decay_from_start h_in
+    decay_start = jnp.exp(a_cum)                     # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, decay_start, h_in)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba_forward(p, x, cfg: ModelConfig, want_cache: bool = False):
+    """Full-sequence Mamba2 mixer.  x: (B, S, D) -> (B, S, D)
+    (or (out, cache) when want_cache, for prefill)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di = s.expand * D
+    H, P, N = di // s.head_dim, s.head_dim, s.d_state
+
+    xz = x @ p["w_x"]                                              # (B,S,di)
+    z = x @ p["w_z"]
+    Bm = x @ p["w_B"]                                              # (B,S,N)
+    Cm = x @ p["w_C"]
+    dt = x @ p["w_dt"]                                             # (B,S,H)
+
+    xz = jax.nn.silu(_causal_conv(xz, p["conv_x"], s.d_conv))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"], s.d_conv))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"], s.d_conv))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                   # (H,)
+    xh = xz.reshape(B, S, H, P)
+    y, final = _ssd_chunked(xh, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), s.chunk)
+    y = y + xh * p["D"][None, None, :, None]
+    y = (y.reshape(B, S, di) * jax.nn.silu(z)).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"]).astype(x.dtype)
+    if want_cache:
+        # store the raw (pre-activation) conv inputs for the last d_conv-1 steps
+        cache = {
+            "ssm": final.astype(x.dtype),
+            "conv_x": (x @ p["w_x"])[:, -(s.d_conv - 1):],
+            "conv_B": (x @ p["w_B"])[:, -(s.d_conv - 1):],
+            "conv_C": (x @ p["w_C"])[:, -(s.d_conv - 1):],
+        }
+        return out, cache
+    return out
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, P, N = di // s.head_dim, s.head_dim, s.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), dtype),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, N), dtype),
+    }
+
+
+def mamba_decode_step(p, x, cache, cfg: ModelConfig):
+    """One-token recurrent step.  x: (B, 1, D)."""
+    s = cfg.ssm
+    B, _, D = x.shape
+    di = s.expand * D
+    H, P, N = di // s.head_dim, s.head_dim, s.d_state
+
+    x0 = x[:, 0]
+    xz_new = x0 @ p["w_x"]                                         # (B,di)
+    z = x0 @ p["w_z"]
+    Bm_new = x0 @ p["w_B"]
+    Cm_new = x0 @ p["w_C"]
+    dt = x0 @ p["w_dt"]
+
+    def conv_step(cache_w, new, w):
+        window = jnp.concatenate([cache_w, new[:, None]], axis=1)  # (B,d_conv,C)
+        out = jnp.einsum("btc,tc->bc", window, w)
+        return jax.nn.silu(out), window[:, 1:]
+
+    xz, cx = conv_step(cache["conv_x"], xz_new, p["conv_x"])
+    Bm, cB = conv_step(cache["conv_B"], Bm_new, p["conv_B"])
+    Cm, cC = conv_step(cache["conv_C"], Cm_new, p["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                                   # (B,H)
+    xh = xz.reshape(B, H, P)
+    h = cache["ssm"].astype(jnp.float32) * a[..., None, None] \
+        + jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32), dt,
+                     xh.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h) \
+        + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = (y.reshape(B, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None].astype(x.dtype)
+    new_cache = {"ssm": h.astype(cache["ssm"].dtype), "conv_x": cx,
+                 "conv_B": cB, "conv_C": cC}
+    return out, new_cache

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with grouped einsum dispatch (expert-parallel
+friendly: the expert dimension shards over the `model` mesh axis, XLA turns
+the dispatch/combine einsums into all-to-alls under GSPMD).
+
+Supports qwen3-moe (128e top-8) and llama4-maverick (128e top-1 + shared
+expert, MoE interleaved every other layer).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), in_axis=-2, dtype=dtype),
+        "w_up": dense_init(ks[2], (E, D, F), in_axis=-2, dtype=dtype),
+        "w_down": dense_init(ks[3], (E, F, D), in_axis=-2, dtype=dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, dtype, d_ff=m.n_shared_experts * cfg.d_ff)
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(group * top_k * factor / n_experts)
+    return max(c, top_k)
+
+
+def moe_ffn(p, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Grouped dispatch: tokens are chunked into groups of m.group_size; within a
+    group each token picks top_k experts; per-expert capacity C bounds the
+    dispatched tensor (E, G, C, D).  Overflow tokens are dropped (standard
+    switch-style), recovered by the residual connection.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    g = min(m.group_size, B * S)
+    T = B * S
+    assert T % g == 0, f"tokens {T} not divisible by group {g}"
+    G = T // g
+    C = _capacity(g, K, E, m.capacity_factor)
+
+    xt = x.reshape(G, g, D)
+    scores = jax.nn.softmax((xt.astype(jnp.float32) @ p["router"]), axis=-1)  # (G,g,E)
+    gate_vals, expert_idx = jax.lax.top_k(scores, K)                          # (G,g,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert's dispatch buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)                   # (G,g,K,E)
+    pos_in_expert = jnp.cumsum(onehot.reshape(G, g * K, E), axis=1).reshape(G, g, K, E) - 1
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                            # (G,g,K)
+
+    # dispatch/combine tensors (G, g, E, C); contraction over K stays fused so
+    # the (G,g,K,E,C) outer product is never materialised.  one_hot(pos, C)
+    # is all-zero for overflow tokens (pos >= C) -> switch-style dropping.
+    oh_e = jax.nn.one_hot(expert_idx, E, dtype=x.dtype)                       # (G,g,K,E)
+    oh_c = jax.nn.one_hot(pos, C, dtype=x.dtype)                              # (G,g,K,C)
+    disp = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)
+    comb = jnp.einsum("gske,gskc->gsec", oh_e, oh_c * gate_vals[..., None].astype(x.dtype))
+
+    xe = jnp.einsum("ygec,ygd->eycd", disp, xt)                               # (E,G,C,D)
+    h = jax.nn.silu(jnp.einsum("eycd,edf->eycf", xe, p["w_gate"])) \
+        * jnp.einsum("eycd,edf->eycf", xe, p["w_up"])
+    ye = jnp.einsum("eycf,efd->eycd", h, p["w_down"])                         # (E,G,C,D)
+    y = jnp.einsum("ygec,eycd->ygd", comb, ye)
+    if m.combine_seq_shard:
+        # beyond-paper: constrain the combine output to be group-sharded over
+        # the model axis so the expert-contraction all-reduce becomes a
+        # reduce-scatter (+ all-gather at the residual) — see EXPERIMENTS §Perf B
+        from jax.sharding import PartitionSpec as _P
+        y = jax.lax.with_sharding_constraint(y, _P("model", None, None))
+    y = y.reshape(B, S, D)
+
+    # switch-style load-balance aux loss: E * sum_e f_e * p_e
+    density = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=2),
+                       axis=(0, 1)) / K                                       # fraction per expert
+    router_prob = jnp.mean(scores, axis=(0, 1))
+    aux = E * jnp.sum(density * router_prob)
+
+    if m.n_shared_experts:
+        y = y + mlp(p["shared"], x, cfg)
+    return y, aux

@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch" block (data-dependent decay linear attention) —
+arXiv:2404.05892.  Attention-free: time-mix (WKV recurrence) + channel-mix.
+
+Per head (k, v in R^{P}):   S_t in R^{P x P}
+    out_t = r_t^T ( diag(u) k_t v_t^T + S_t )
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T          (w_t data-dependent, per channel)
+
+Decode is O(1)-state; this is the showcase arch for long_500k.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+LORA_R = 32     # low-rank size of the data-dependent mixes/decay
+
+
+def init_rwkv_timemix(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads > 0 else D // 64
+    P = D // H
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": (jax.random.uniform(ks[0], (D,)) * 0.1).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (5, D)) * 0.1).astype(dtype),   # r,k,v,g,w
+        "lora_A": dense_init(ks[2], (D, 5 * LORA_R), dtype=dtype),
+        "lora_B": (jax.random.normal(ks[3], (5, LORA_R, D)) * 0.01).astype(dtype),
+        "w_r": dense_init(ks[4], (D, D), dtype=dtype),
+        "w_k": dense_init(ks[5], (D, D), dtype=dtype),
+        "w_v": dense_init(ks[6], (D, D), dtype=dtype),
+        "w_g": dense_init(ks[7], (D, D), dtype=dtype),
+        "w_o": dense_init(ks[8], (D, D), dtype=dtype),
+        "decay_base": jnp.linspace(-6.0, -1.0, D).astype(jnp.float32),
+        "decay_A": dense_init(ks[9], (D, LORA_R), dtype=dtype),
+        "decay_B": (jax.random.normal(ks[10], (LORA_R, D)) * 0.01).astype(dtype),
+        "bonus_u": (jax.random.normal(ks[11], (D,)) * 0.1).astype(jnp.float32),
+        "ln_out": jnp.zeros((D,), dtype),
+    }
+
+
+def init_rwkv_channelmix(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (D,)) * 0.1).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[1], (D,)) * 0.1).astype(dtype),
+        "w_k": dense_init(ks[2], (D, F), dtype=dtype),
+        "w_v": dense_init(ks[3], (F, D), dtype=dtype),
+        "w_r": dense_init(jax.random.fold_in(ks[3], 1), (D, D), dtype=dtype),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation (RWKV6 'ddlerp') ->
+    five mixed streams (r, k, v, g, w), each (B, S, D)."""
+    xx = x_prev - x                                             # (B,S,D)
+    base = x + xx * p["mu_x"][None, None, :]
+    a = jax.nn.tanh(base @ p["lora_A"]).reshape(base.shape[0], base.shape[1], 5, LORA_R)
+    dyn = jnp.einsum("bsir,ird->bsid", a, p["lora_B"])          # (B,S,5,D)
+    mixes = p["mu"][None, None] + dyn                           # (B,S,5,D)
+    return [x + xx * mixes[:, :, i] for i in range(5)]
+
+
+def _wkv_scan(r, k, v, w, u, H: int, state=None):
+    """WKV linear-attention recurrence.
+    r,k,v: (B,S,H,P); w: (B,S,H,P) per-channel decay in (0,1); u: (H,P) bonus.
+    Returns out (B,S,H,P), final state (B,H,P,P)."""
+    B, S, Hn, P = r.shape
+    if state is None:
+        state = jnp.zeros((B, Hn, P, P), jnp.float32)
+
+    def body(S_c, inp):
+        r_t, k_t, v_t, w_t = inp                                # (B,H,P) each
+        kv = jnp.einsum("bhp,bhq->bhpq", k_t, v_t)              # (B,H,P,P)
+        out = jnp.einsum("bhp,bhpq->bhq", r_t, S_c + u[None, :, :, None] * kv)
+        S_n = w_t[..., None] * S_c + kv
+        return S_n, out
+
+    xs = (jnp.swapaxes(r, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(k, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(v, 0, 1).astype(jnp.float32),
+          jnp.swapaxes(w, 0, 1).astype(jnp.float32))
+    final, outs = jax.lax.scan(body, state, xs)
+    return jnp.swapaxes(outs, 0, 1), final
+
+
+def timemix_forward(p, x, cfg: ModelConfig, x_prev_last=None, state=None):
+    """x: (B,S,D).  x_prev_last: (B,D) carry-in shift state (decode chaining).
+    Returns (out, (last_x, final_wkv_state))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    x_prev = jnp.concatenate(
+        [jnp.zeros((B, 1, D), x.dtype) if x_prev_last is None else x_prev_last[:, None],
+         x[:, :-1]], axis=1)
+    xr, xk, xv, xg, xw = _ddlerp(p, x, x_prev)
+    r = (xr @ p["w_r"]).reshape(B, S, H, P)
+    k = (xk @ p["w_k"]).reshape(B, S, H, P)
+    v = (xv @ p["w_v"]).reshape(B, S, H, P)
+    g = jax.nn.silu(xg @ p["w_g"])
+    dec = p["decay_base"][None, None] + jax.nn.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, H, P)
+    u = p["bonus_u"].reshape(H, P)
+    out, final = _wkv_scan(r, k, v, w, u, H, state)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = rms_norm(out, p["ln_out"], cfg.norm_eps) * g
+    return out @ p["w_o"], (x[:, -1], final)
+
+
+def channelmix_forward(p, x, x_prev_last=None):
+    B, S, D = x.shape
+    x_prev = jnp.concatenate(
+        [jnp.zeros((B, 1, D), x.dtype) if x_prev_last is None else x_prev_last[:, None],
+         x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"][None, None]
+    xr = x + xx * p["mu_r"][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1]
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    return {
+        "wkv": jnp.zeros((batch, H, P, P), jnp.float32),
+        "shift_tm": jnp.zeros((batch, D), dtype),
+        "shift_cm": jnp.zeros((batch, D), dtype),
+    }

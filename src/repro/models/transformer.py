@@ -1,0 +1,390 @@
+"""Generic composable model stack driven by ModelConfig.
+
+Every architecture is expressed as a *block pattern* (tuple of block kinds)
+repeated `repeat` times via lax.scan over stacked parameters, plus an optional
+unstacked `tail` and an optional weight-shared block (zamba2).  One code path
+serves all six families (dense / moe / ssm / hybrid / vlm / audio) and all
+three execution modes (train loss, prefill, single-token decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import moe as MOE
+from . import mamba2 as M2
+from . import rwkv6 as R6
+
+
+# ---------------------------------------------------------------------------
+# block pattern
+# ---------------------------------------------------------------------------
+
+def block_pattern(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """Returns (pattern, repeat, tail): `pattern` is scanned `repeat` times,
+    then `tail` blocks are applied once each (handles non-divisible stacks)."""
+    Ln = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "audio"):
+        if cfg.local_global_pattern > 0:
+            k = cfg.local_global_pattern
+            unit = ("dense_local",) * k + ("dense_global",)
+            rep, rem = divmod(Ln, len(unit))
+            return unit, rep, unit[:rem]
+        return ("dense_global",), Ln, ()
+    if cfg.family == "moe":
+        ev = cfg.moe.moe_every
+        if ev == 1:
+            return ("moe",), Ln, ()
+        unit = ("dense_global",) * (ev - 1) + ("moe",)
+        rep, rem = divmod(Ln, ev)
+        return unit, rep, unit[:rem]
+    if cfg.family == "ssm":
+        kind = "rwkv" if cfg.ssm.kind == "rwkv6" else "mamba"
+        return (kind,), Ln, ()
+    if cfg.family == "hybrid":
+        se = cfg.hybrid.shared_every
+        unit = ("mamba",) * (se - 1) + ("shared",)
+        rep, rem = divmod(Ln, se)
+        return unit, rep, ("mamba",) * rem
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _cast(p, dt):
+    """Cast floating-point params to the compute dtype (f32 master weights ->
+    bf16 compute).  Leaves used in f32 paths re-upcast explicitly."""
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating) else a, p)
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind in ("dense_global", "dense_local", "shared"):
+        return {"ln1": jnp.zeros((D,), dtype), "attn": L.init_attention(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((D,), dtype), "mlp": L.init_mlp(ks[1], cfg, dtype)}
+    if kind == "moe":
+        return {"ln1": jnp.zeros((D,), dtype), "attn": L.init_attention(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((D,), dtype), "moe": MOE.init_moe(ks[1], cfg, dtype)}
+    if kind == "mamba":
+        return {"ln": jnp.zeros((D,), dtype), "mixer": M2.init_mamba(ks[0], cfg, dtype)}
+    if kind == "rwkv":
+        return {"ln1": jnp.zeros((D,), dtype), "tm": R6.init_rwkv_timemix(ks[0], cfg, dtype),
+                "ln2": jnp.zeros((D,), dtype), "cm": R6.init_rwkv_channelmix(ks[1], cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kind in ("dense_global", "moe", "shared"):
+        C = max_seq
+        return {"k": jnp.zeros((batch, C, KV, Dh), dtype),
+                "v": jnp.zeros((batch, C, KV, Dh), dtype)}
+    if kind == "dense_local":
+        C = min(cfg.sliding_window or max_seq, max_seq)
+        return {"k": jnp.zeros((batch, C, KV, Dh), dtype),
+                "v": jnp.zeros((batch, C, KV, Dh), dtype)}
+    if kind == "mamba":
+        return M2.init_mamba_cache(cfg, batch, dtype)
+    if kind == "rwkv":
+        return R6.init_rwkv_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_block_full(kind: str, p, x, cfg: ModelConfig, positions,
+                     attn_mask=None, want_cache: bool = False):
+    """Full-sequence pass (train / prefill).
+    Returns (x, cache_or_None, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind in ("dense_global", "dense_local", "moe", "shared"):
+        h, (k, v) = L.attention(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                                positions, local=(kind == "dense_local"),
+                                attn_mask=attn_mask)
+        x = x + h
+        y = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            f, aux = MOE.moe_ffn(p["moe"], y, cfg)
+        else:
+            f = L.mlp(p["mlp"], y, cfg)
+        x = x + f
+        cache = None
+        if want_cache:
+            C = min(cfg.sliding_window, k.shape[1]) if kind == "dense_local" and cfg.sliding_window else k.shape[1]
+            cache = {"k": k[:, -C:], "v": v[:, -C:]}
+        return x, cache, aux
+    if kind == "mamba":
+        xin = L.rms_norm(x, p["ln"], cfg.norm_eps)
+        if want_cache:
+            h, cache = M2.mamba_forward(p["mixer"], xin, cfg, want_cache=True)
+            return x + h, cache, aux
+        return x + M2.mamba_forward(p["mixer"], xin, cfg), None, aux
+    if kind == "rwkv":
+        h, (last_tm, wkv) = R6.timemix_forward(p["tm"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        x = x + h
+        y, last_cm = R6.channelmix_forward(p["cm"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+        x = x + y
+        cache = {"wkv": wkv, "shift_tm": last_tm, "shift_cm": last_cm} if want_cache else None
+        return x, cache, aux
+    raise ValueError(kind)
+
+
+def apply_block_decode(kind: str, p, x, cfg: ModelConfig, cache, pos):
+    """Single-token decode.  x: (B,1,D); pos: (B,).
+    Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0)
+    if kind in ("dense_global", "dense_local", "moe", "shared"):
+        h, ck, cv = L.decode_attention(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                                       cfg, cache["k"], cache["v"], pos,
+                                       local=(kind == "dense_local"))
+        x = x + h
+        y = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            f, aux = MOE.moe_ffn(p["moe"], y, cfg)
+        else:
+            f = L.mlp(p["mlp"], y, cfg)
+        return x + f, {"k": ck, "v": cv}, aux
+    if kind == "mamba":
+        h, new_cache = M2.mamba_decode_step(p["mixer"], L.rms_norm(x, p["ln"], cfg.norm_eps), cache, cfg)
+        return x + h, new_cache, aux
+    if kind == "rwkv":
+        xin = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        h, (last_tm, wkv) = R6.timemix_forward(p["tm"], xin, cfg,
+                                               x_prev_last=cache["shift_tm"],
+                                               state=cache["wkv"])
+        x = x + h
+        yin = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, last_cm = R6.channelmix_forward(p["cm"], yin, x_prev_last=cache["shift_cm"])
+        return x + y, {"wkv": wkv, "shift_tm": last_tm, "shift_cm": last_cm}, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.pattern, self.repeat, self.tail = block_pattern(self.cfg)
+        self.has_shared = "shared" in self.pattern or "shared" in self.tail
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, len(self.pattern) + len(self.tail) + 4)
+        params: Dict[str, Any] = {}
+
+        def stacked(k, kind):
+            return jax.vmap(lambda kk: init_block(kk, kind, cfg, dt))(
+                jax.random.split(k, self.repeat))
+
+        params["stack"] = {f"p{i}": stacked(keys[i], kind)
+                           for i, kind in enumerate(self.pattern) if kind != "shared"}
+        params["tail"] = {f"t{i}": init_block(keys[len(self.pattern) + i], kind, cfg, dt)
+                          for i, kind in enumerate(self.tail) if kind != "shared"}
+        if self.has_shared:
+            params["shared"] = init_block(keys[-4], "shared", cfg, dt)
+        if cfg.family == "audio":
+            fe = cfg.frontend
+            params["in_proj"] = L.dense_init(keys[-3], (fe.embed_dim, cfg.d_model), dtype=dt)
+            params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+            params["head"] = L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype=dt)
+        else:
+            params["embed"] = L.init_embed(keys[-3], cfg, dt)
+        if cfg.family == "vlm":
+            fe = cfg.frontend
+            k1, k2 = jax.random.split(keys[-1])
+            params["projector"] = {
+                "w1": L.dense_init(k1, (fe.embed_dim, cfg.d_model), dtype=dt),
+                "w2": L.dense_init(k2, (cfg.d_model, cfg.d_model), dtype=dt)}
+        return params
+
+    # -- stack runner ---------------------------------------------------------
+
+    def _run_stack(self, params, x, positions, *, mode: str, caches=None,
+                   pos=None, attn_mask=None):
+        """mode: 'train' | 'prefill' | 'decode'."""
+        cfg = self.cfg
+        shared_p = params.get("shared")
+        want_cache = mode == "prefill"
+
+        def apply_one(kind, p, x, cache):
+            p = _cast(p, x.dtype)
+            if mode == "decode":
+                return apply_block_decode(kind, p, x, cfg, cache, pos)
+            return apply_block_full(kind, p, x, cfg, positions,
+                                    attn_mask=attn_mask, want_cache=want_cache)
+
+        def body(carry, xs):
+            x, aux = carry
+            p_slices, cache_slices = xs
+            new_caches = {}
+            for i, kind in enumerate(self.pattern):
+                p = shared_p if kind == "shared" else p_slices[f"p{i}"]
+                c = None if cache_slices is None else cache_slices[f"c{i}"]
+                x, cn, a = apply_one(kind, p, x, c)
+                aux = aux + a
+                if cn is not None:
+                    new_caches[f"c{i}"] = cn
+            return (x, aux), (new_caches if new_caches else None)
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+        elif cfg.remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        stack_caches = None if caches is None else caches["stack"]
+        (x, aux), new_stack_caches = jax.lax.scan(
+            body, (x, jnp.float32(0)), (params["stack"], stack_caches),
+            unroll=self.repeat if cfg.scan_unroll else 1)
+
+        new_tail_caches = {}
+        for i, kind in enumerate(self.tail):
+            p = shared_p if kind == "shared" else params["tail"][f"t{i}"]
+            c = None if caches is None else caches["tail"][f"t{i}"]
+            x, cn, a = apply_one(kind, p, x, c)
+            aux = aux + a
+            if cn is not None:
+                new_tail_caches[f"t{i}"] = cn
+
+        new_caches = None
+        if new_stack_caches is not None or new_tail_caches:
+            new_caches = {"stack": new_stack_caches, "tail": new_tail_caches}
+        return x, aux, new_caches
+
+    # -- inputs ---------------------------------------------------------------
+
+    def _embed_inputs(self, params, batch):
+        """Returns (x, positions, labels, valid)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        if cfg.family == "audio":
+            x = batch["frame_embeds"].astype(dt) @ params["in_proj"].astype(dt)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            return x, positions, batch.get("targets"), batch.get("mask")
+        if cfg.family == "vlm":
+            pe = batch["patch_embeds"].astype(dt)
+            proj = params["projector"]
+            vis = jax.nn.gelu(pe @ proj["w1"].astype(dt)) @ proj["w2"].astype(dt)
+            txt = L.embed_tokens(params["embed"], batch["tokens"], cfg).astype(dt)
+            x = jnp.concatenate([vis, txt], axis=1)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            labels = batch.get("labels")
+            valid = None
+            if labels is not None:
+                np_ = vis.shape[1]
+                valid = jnp.concatenate(
+                    [jnp.zeros((B, np_), jnp.float32), jnp.ones((B, labels.shape[1]), jnp.float32)],
+                    axis=1)
+                labels = jnp.concatenate(
+                    [jnp.zeros((B, np_), labels.dtype), labels], axis=1)
+            return x, positions, labels, valid
+        tokens = batch["tokens"]
+        x = L.embed_tokens(params["embed"], tokens, cfg).astype(dt)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, positions, batch.get("labels"), batch.get("valid")
+
+    def _final_logits(self, params, h):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            h = L.rms_norm(h, params["final_norm"].astype(h.dtype), cfg.norm_eps)
+            return L.softcap(h @ params["head"].astype(h.dtype), cfg.final_logit_softcap)
+        return L.logits_from_hidden(_cast(params["embed"], h.dtype), h, cfg)
+
+    # -- public API -----------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x, positions, labels, valid = self._embed_inputs(params, batch)
+        h, aux, _ = self._run_stack(params, x, positions, mode="train")
+        if cfg.family == "audio":
+            logits = self._final_logits(params, h)
+            ce = L.cross_entropy(logits, labels, valid)
+        elif cfg.loss_chunk > 0 and cfg.family != "audio":
+            emb = _cast(params["embed"], h.dtype)
+            ce = L.chunked_lm_loss(emb, h, labels, cfg, valid)
+        else:
+            logits = self._final_logits(params, h)
+            ce = L.cross_entropy(logits, labels, valid)
+        aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+        total = ce + aux_w * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch):
+        """Full-sequence pass producing last-token logits + KV/state caches."""
+        x, positions, _, _ = self._embed_inputs(params, batch)
+        h, _, caches = self._run_stack(params, x, positions, mode="prefill")
+        logits = self._final_logits(params, h[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, token, caches, pos):
+        """token: (B, 1) int; pos: (B,) absolute position; returns (logits, caches)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = L.embed_tokens(params["embed"], token, cfg).astype(dt) \
+            if cfg.family != "audio" else None
+        h, _, new_caches = self._run_stack(params, x, None, mode="decode",
+                                           caches=caches, pos=pos)
+        logits = self._final_logits(params, h)
+        return logits, new_caches
+
+    # -- caches ---------------------------------------------------------------
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+
+        def stacked_cache(kind):
+            one = init_block_cache(kind, cfg, batch_size, max_seq, dt)
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (self.repeat,) + a.shape), one)
+
+        stack = {f"c{i}": stacked_cache(kind) for i, kind in enumerate(self.pattern)}
+        tail = {f"t{i}": init_block_cache(kind, cfg, batch_size, max_seq, dt)
+                for i, kind in enumerate(self.tail)}
+        return {"stack": stack, "tail": tail}
+
+    def cache_specs(self, batch_size: int, max_seq: int):
+        concrete = jax.eval_shape(lambda: self.init_cache(batch_size, max_seq))
+        return concrete
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    m = Model(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    return sum(int(l.size) for l in jax.tree.leaves(shapes))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Exact count minus non-routed expert weights (MoE top-k activation)."""
+    total = count_params(cfg)
+    if cfg.family != "moe":
+        return total
+    m = cfg.moe
+    expert = 3 * cfg.d_model * m.d_expert
+    n_moe_layers = cfg.n_layers // m.moe_every
+    return total - (m.n_experts - m.top_k) * expert * n_moe_layers

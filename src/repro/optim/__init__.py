@@ -1,0 +1,2 @@
+from .sgd import (Optimizer, OptState, sgd, momentum_sgd, adamw, make_optimizer,
+                  paper_decay_schedule, constant_schedule, cosine_schedule)

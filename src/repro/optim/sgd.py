@@ -1,0 +1,116 @@
+"""Optimizers for decentralized training.
+
+CHOCO-SGD's local half-step is plain SGD in the paper (Algorithm 2, line 3).
+We also provide momentum-SGD and AdamW as optional local optimizers (the
+error-feedback analysis of Assumption 3 is agnostic to how x^{t+1/2} is
+produced from x^t), plus the paper's decaying schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Any          # first moment (momentum / Adam m); empty tree for plain SGD
+    nu: Any          # second moment (Adam only); empty tree otherwise
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, Any, OptState, jax.Array], Tuple[Any, OptState]]
+    # update(params, grads, state, lr) -> (new_params_half_step, new_state)
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(mu=None, nu=None, count=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, lr):
+        def upd(p, g):
+            g = g + weight_decay * p if weight_decay else g
+            return p - lr * g.astype(p.dtype)
+        return jax.tree.map(upd, params, grads), state._replace(count=state.count + 1)
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum_sgd(beta: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return OptState(mu=jax.tree.map(jnp.zeros_like, params), nu=None,
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, lr):
+        def mom(m, g):
+            return beta * m + g
+        mu = jax.tree.map(mom, state.mu, grads)
+
+        def upd(p, g, m):
+            d = g + beta * m if nesterov else m
+            d = d + weight_decay * p if weight_decay else d
+            return p - lr * d.astype(p.dtype)
+        new_params = jax.tree.map(upd, params, grads, mu)
+        return new_params, OptState(mu=mu, nu=None, count=state.count + 1)
+
+    return Optimizer("momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(mu=z, nu=jax.tree.map(jnp.copy, z),
+                        count=jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, lr):
+        c = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, m, v):
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            d = d + weight_decay * p.astype(jnp.float32) if weight_decay else d
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+        return jax.tree.map(upd, params, mu, nu), OptState(mu=mu, nu=nu, count=c)
+
+    return Optimizer("adamw", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[name](**kw)
+
+
+# -- schedules ---------------------------------------------------------------
+
+def paper_decay_schedule(m: int, a: float, b: float):
+    """eta_t = m a / (t + b)   (paper §5.3, Table 4)."""
+    def lr(t):
+        return m * a / (t.astype(jnp.float32) + b)
+    return lr
+
+
+def constant_schedule(lr0: float):
+    def lr(t):
+        return jnp.float32(lr0)
+    return lr
+
+
+def cosine_schedule(lr0: float, warmup: int, total: int):
+    def lr(t):
+        t = t.astype(jnp.float32)
+        warm = lr0 * t / max(warmup, 1)
+        prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr0 * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(t < warmup, warm, cos)
+    return lr

@@ -1,0 +1,183 @@
+"""Decentralized trainer: CHOCO-SGD over a device mesh.
+
+State layout: every decentralized leaf (params, x_hat, s, optimizer moments)
+carries a leading node dim of size n_nodes, sharded over the gossip mesh axis.
+One train step =
+    per-node grad (vmap over the node dim -> zero cross-node collectives)
+  -> local optimizer half-step
+  -> CHOCO gossip exchange (shard_map + ppermute of compressed payloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ChocoConfig
+from repro.core.compression import make_compressor
+from repro.core.choco_gossip import theorem2_stepsize
+from repro.core.topology import ring, torus2d
+from repro.comm.gossip import make_gossip_exchange
+from repro.models.transformer import Model
+from repro.optim.sgd import Optimizer, OptState
+from repro.launch.sharding import param_pspecs, batch_pspecs
+
+
+class TrainState(NamedTuple):
+    params: Any      # (n_nodes, ...) leaves — the x_i of Algorithm 2
+    x_hat: Any       # public copies
+    s: Any           # weighted neighbour aggregates
+    opt: OptState    # per-node optimizer moments
+    step: jax.Array
+    key: jax.Array
+
+
+@dataclasses.dataclass
+class DecentralizedTrainer:
+    model: Model
+    choco: ChocoConfig
+    mesh: Any
+    n_nodes: int
+    optimizer: Optimizer
+    lr_fn: Callable[[jax.Array], jax.Array]
+    mode: str = "choco"          # choco | plain | allreduce
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self.compressor = (make_compressor(self.choco.compressor, **self.choco.comp_dict())
+                           if self.mode == "choco" else None)
+        axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        # torus topology: gossip over the (pod, data) grid — paper Table 1
+        # delta = O(1/n) instead of the ring's O(1/n^2)
+        self.torus = (self.choco.topology == "torus"
+                      and "pod" in self.mesh.axis_names)
+        if self.torus:
+            self.gossip_axis = ("pod", "data")
+            n = axes["pod"] * axes["data"]
+            self.fsdp_axis = None
+            topo = torus2d(axes["pod"], axes["data"])
+        else:
+            self.gossip_axis = self.choco.gossip_axis
+            n = axes[self.gossip_axis]
+            self.fsdp_axis = "data" if self.gossip_axis == "pod" else None
+            topo = ring(n)
+        assert n == self.n_nodes, \
+            f"gossip over {self.gossip_axis} = {n} nodes != n_nodes {self.n_nodes}"
+        # Theorem-2 consensus stepsize from the topology and compression
+        if self.choco.consensus_gamma is not None:
+            self.gamma = self.choco.consensus_gamma
+        elif self.mode == "choco":
+            # omega depends on leaf size; use a representative 1M-coordinate value
+            omega = self.compressor.omega(1 << 20)
+            self.gamma = theorem2_stepsize(topo.delta, topo.beta, omega)
+        else:
+            self.gamma = 1.0
+
+    # -- state ----------------------------------------------------------------
+
+    def _init_state_fn(self):
+        model, n = self.model, self.n_nodes
+
+        sdt = jnp.dtype(self.choco.state_dtype)
+
+        def init(key):
+            pkeys = jax.random.split(key, n)
+            params = jax.vmap(model.init)(pkeys)
+            ef_zeros = lambda: jax.tree.map(
+                lambda p: jnp.zeros(p.shape, sdt if jnp.issubdtype(p.dtype, jnp.floating)
+                                    else p.dtype), params)
+            opt = self.optimizer.init(params)
+            return TrainState(params=params, x_hat=ef_zeros(), s=ef_zeros(),
+                              opt=opt, step=jnp.zeros((), jnp.int32), key=key)
+        return init
+
+    def state_shape(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self._init_state_fn(), key)
+
+    def state_pspecs(self, state_shape) -> TrainState:
+        cfg = self.model.cfg
+        pspec = lambda tree: param_pspecs(tree, cfg, node_axis=self.gossip_axis,
+                                          fsdp_axis=self.fsdp_axis, model_size=0)
+        opt_shape = state_shape.opt
+        opt_spec = OptState(
+            mu=None if opt_shape.mu is None else pspec(opt_shape.mu),
+            nu=None if opt_shape.nu is None else pspec(opt_shape.nu),
+            count=P())
+        return TrainState(params=pspec(state_shape.params),
+                          x_hat=pspec(state_shape.x_hat),
+                          s=pspec(state_shape.s),
+                          opt=opt_spec, step=P(), key=P())
+
+    def init_state(self, key) -> TrainState:
+        shape = self.state_shape(key)
+        specs = self.state_pspecs(shape)
+        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(self._init_state_fn(), out_shardings=shardings)(key)
+
+    # -- step -----------------------------------------------------------------
+
+    def make_train_step(self):
+        model, opt, lr_fn = self.model, self.optimizer, self.lr_fn
+
+        def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+            # 1. per-node stochastic gradient (no cross-node collectives)
+            def loss_fn(p, b):
+                loss, metrics = model.loss(p, b)
+                return loss, metrics
+            (losses, metrics), grads = jax.vmap(
+                jax.value_and_grad(loss_fn, has_aux=True))(state.params, batch)
+
+            # 2. local optimizer half-step  x^{t+1/2}
+            lr = lr_fn(state.step)
+            x_half, new_opt = opt.update(state.params, grads, state.opt, lr)
+
+            # 3. gossip exchange (CHOCO / plain / all-reduce)
+            gkey = jax.random.fold_in(state.key, state.step)
+            exchange = self._exchange(state.params)   # specs from leaf ndims
+            new_params, new_hat, new_s = exchange(gkey, x_half, state.x_hat, state.s)
+
+            out = TrainState(params=new_params, x_hat=new_hat, s=new_s,
+                             opt=new_opt, step=state.step + 1, key=state.key)
+            mets = {"loss": jnp.mean(losses), "lr": lr,
+                    "grad_norm": _global_norm(grads)}
+            for k, v in metrics.items():
+                mets[k] = jnp.mean(v)
+            return out, mets
+
+        return train_step
+
+    def _exchange(self, params_shape):
+        specs = param_pspecs(params_shape, self.model.cfg,
+                             node_axis=self.gossip_axis, fsdp_axis=self.fsdp_axis,
+                             model_size=0)
+        return make_gossip_exchange(
+            mode=self.mode, mesh=self.mesh, state_specs=specs,
+            axis=self.gossip_axis, compressor=self.compressor, gamma=self.gamma,
+            exact_small_leaves=self.choco.exact_small_leaves,
+            small_leaf_threshold=self.choco.small_leaf_threshold)
+
+    # -- jit with shardings -----------------------------------------------------
+
+    def jitted_train_step(self, state_shape, batch_shape):
+        state_specs = self.state_pspecs(state_shape)
+        bspecs = batch_pspecs(batch_shape, node_axis=self.gossip_axis,
+                              dp_axis=self.fsdp_axis)
+        shard = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        step = self.make_train_step()
+        return jax.jit(step,
+                       in_shardings=(shard(state_specs), shard(bspecs)),
+                       out_shardings=(shard(state_specs), None),
+                       donate_argnums=(0,))
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))

@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests run on the single real CPU device; multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (never set globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

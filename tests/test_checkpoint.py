@@ -1,0 +1,39 @@
+"""Checkpoint round-trips, including CHOCO error-feedback state."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointing import (save_pytree, restore_pytree,
+                                            load_metadata)
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.zeros((), jnp.int32)}}
+    p = str(tmp_path / "ckpt")
+    save_pytree(p, tree, metadata={"step": 7})
+    got = restore_pytree(p, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert load_metadata(p)["step"] == 7
+
+
+def test_trainstate_roundtrip(tmp_path):
+    from repro.train.trainer import TrainState
+    from repro.optim import sgd
+    params = {"w": jnp.ones((3, 4))}
+    st = TrainState(params=params,
+                    x_hat=jax.tree.map(lambda x: x * 0.5, params),
+                    s=jax.tree.map(lambda x: x * 0.1, params),
+                    opt=sgd().init(params),
+                    step=jnp.int32(42), key=jax.random.PRNGKey(1))
+    p = str(tmp_path / "state")
+    save_pytree(p, st, metadata={"step": 42})
+    got = restore_pytree(p, jax.eval_shape(lambda: st))
+    assert int(got.step) == 42
+    np.testing.assert_allclose(np.asarray(got.x_hat["w"]), 0.5)
+    np.testing.assert_allclose(np.asarray(got.s["w"]), 0.1)

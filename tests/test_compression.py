@@ -1,0 +1,104 @@
+"""Compression operators: Assumption 1 contraction property + wire formats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (Identity, RandK, TopK, QSGD, SignNorm,
+                                    RandomizedGossip, make_compressor)
+
+DIMS = [16, 100, 1000]
+
+
+def _rand(seed, d, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,)) * scale
+
+
+def _mean_sq_err(comp, x, n_trials=20):
+    """Monte-Carlo E||Q(x) - x||^2."""
+    errs = []
+    for i in range(n_trials if comp.stochastic else 1):
+        k = jax.random.PRNGKey(100 + i)
+        q = comp.apply(k, x)
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    return np.mean(errs)
+
+
+@pytest.mark.parametrize("d", DIMS)
+@pytest.mark.parametrize("make", [
+    lambda: Identity(),
+    lambda: RandK(fraction=0.1),
+    lambda: TopK(fraction=0.1),
+    lambda: QSGD(16),
+    lambda: QSGD(127),
+    lambda: SignNorm(),
+    lambda: RandomizedGossip(0.3),
+])
+def test_contraction_property(d, make):
+    """E||Q(x)-x||^2 <= (1 - omega) ||x||^2   (eq. 7)."""
+    comp = make()
+    x = _rand(d, d)
+    omega = comp.omega(d)
+    assert 0 < omega <= 1
+    lhs = _mean_sq_err(comp, x, n_trials=50)
+    rhs = (1 - omega) * float(jnp.sum(x * x))
+    # MC slack for stochastic operators
+    slack = 1.15 if comp.stochastic else 1.0 + 1e-5
+    assert lhs <= rhs * slack + 1e-6, (comp.name, lhs, rhs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 500), st.integers(0, 2 ** 31 - 1))
+def test_topk_contraction_hypothesis(d, seed):
+    comp = TopK(k=max(1, d // 10))
+    x = _rand(seed % 1000, d)
+    lhs = _mean_sq_err(comp, x)
+    assert lhs <= (1 - comp.omega(d)) * float(jnp.sum(x * x)) + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 300), st.integers(1, 100))
+def test_qsgd_contraction_hypothesis(d, s):
+    comp = QSGD(s)
+    x = _rand(d, d, scale=3.0)
+    lhs = _mean_sq_err(comp, x, n_trials=30)
+    assert lhs <= (1 - comp.omega(d)) * float(jnp.sum(x * x)) * 1.2 + 1e-5
+
+
+def test_topk_selects_largest():
+    x = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    q = TopK(k=2).apply(None, x)
+    np.testing.assert_allclose(np.asarray(q), [0, -5.0, 0, 3.0, 0])
+
+
+def test_randk_payload_roundtrip():
+    comp = RandK(fraction=0.25)
+    x = _rand(1, 64)
+    pl = comp.compress(jax.random.PRNGKey(2), x)
+    assert pl.values.shape == (16,)
+    dense = pl.dense()
+    nz = jnp.nonzero(dense)[0]
+    assert set(np.asarray(nz)) == set(np.asarray(pl.indices))
+
+
+def test_qsgd_wire_bits_much_smaller():
+    d = 10_000
+    assert QSGD(16).wire_bits(d) < 32 * d / 5
+    assert TopK(fraction=0.01).wire_bits(d) < 32 * d / 40
+
+
+def test_unbiased_variants():
+    d = 200
+    x = _rand(3, d)
+    comp = RandK(fraction=0.5, rescale=True)
+    keys = [jax.random.PRNGKey(i) for i in range(300)]
+    mean = jnp.mean(jnp.stack([comp.apply(k, x) for k in keys]), axis=0)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=0.45)
+
+
+def test_registry():
+    assert make_compressor("top_k", fraction=0.01).name == "top_k"
+    assert make_compressor("qsgd", s=16).name == "qsgd"
+    with pytest.raises(ValueError):
+        make_compressor("nope")

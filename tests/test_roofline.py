@@ -1,0 +1,67 @@
+"""Roofline machinery: HLO collective parsing + term arithmetic."""
+import numpy as np
+
+from repro.analysis.roofline import (parse_collectives, Roofline,
+                                     PEAK_FLOPS, HBM_BW, ICI_BW,
+                                     model_flops_for)
+from repro.configs.base import get_config, INPUT_SHAPES
+
+
+FAKE_HLO = """
+HloModule test
+ENTRY main {
+  %p0 = f32[16,2048]{1,0} parameter(0)
+  %ag = f32[16,2048]{1,0} all-gather(%p0), replica_groups=[2,8]<=[16], dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = s8[512]{0} collective-permute(%q), source_target_pairs={{0,1},{1,2}}
+  %rs = f32[128]{0} reduce-scatter(%y), replica_groups=[4,4]<=[16], dimensions={0}
+  %a2a = bf16[8,64]{1,0} all-to-all(%z), replica_groups=[2,8]<=[16]
+  %agd = f32[4]{0} all-gather-done(%h)
+}
+"""
+
+
+def test_parse_collective_counts():
+    st = parse_collectives(FAKE_HLO, n_devices=16)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["all-to-all"] == 1
+
+
+def test_parse_collective_bytes():
+    st = parse_collectives(FAKE_HLO, n_devices=16)
+    ag = 16 * 2048 * 4
+    assert abs(st.wire_bytes["all-gather"] - ag * 7 / 8) < 1
+    ar = 1024 * 2
+    assert abs(st.wire_bytes["all-reduce"] - 2 * ar * 3 / 4) < 1
+    assert st.wire_bytes["collective-permute"] == 512
+
+
+def test_roofline_terms():
+    rl = Roofline(flops=PEAK_FLOPS, bytes_accessed=HBM_BW / 2,
+                  wire_bytes=ICI_BW * 2, n_devices=4, model_flops=PEAK_FLOPS)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 0.5) < 1e-9
+    assert abs(rl.collective_s - 2.0) < 1e-9
+    assert rl.dominant == "collective"
+    assert abs(rl.useful_flop_ratio - 0.25) < 1e-9
+    assert rl.step_time_s == rl.collective_s
+
+
+def test_model_flops_modes():
+    cfg = get_config("yi-9b")
+    t = model_flops_for(cfg, INPUT_SHAPES["train_4k"])
+    p = model_flops_for(cfg, INPUT_SHAPES["prefill_32k"])
+    d = model_flops_for(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.n_params()
+    assert abs(t - 6 * n * 256 * 4096) / t < 1e-9
+    assert abs(p - 2 * n * 32 * 32768) / p < 1e-9
+    assert abs(d - 2 * n * 128) / d < 1e-9
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    t = model_flops_for(cfg, INPUT_SHAPES["train_4k"])
+    assert t < 6 * cfg.n_params() * 256 * 4096 / 3   # far below dense count

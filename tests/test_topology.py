@@ -1,0 +1,53 @@
+"""Gossip matrices: Definition 1 validity + Table 1 spectral-gap asymptotics."""
+import numpy as np
+import pytest
+
+from repro.core.topology import (ring, torus2d, fully_connected, chain, star,
+                                 hypercube, make_topology)
+
+
+@pytest.mark.parametrize("topo_fn,n", [
+    (ring, 5), (ring, 25), (fully_connected, 9), (chain, 7), (star, 8),
+    (hypercube, 16), (lambda n: torus2d(4, 4), 16),
+])
+def test_valid_gossip_matrix(topo_fn, n):
+    t = topo_fn(n)
+    t.validate()
+    assert 0 < t.delta <= 1
+    assert 0 <= t.beta <= 2
+
+
+def test_fully_connected_delta_is_one():
+    assert abs(fully_connected(25).delta - 1.0) < 1e-9
+
+
+def test_ring_delta_scaling():
+    """Table 1: ring delta ~ O(1/n^2)."""
+    d9, d36 = ring(9).delta, ring(36).delta
+    ratio = d9 / d36
+    assert 10 < ratio < 26          # ~ (36/9)^2 = 16
+
+
+def test_torus_delta_scaling():
+    """Table 1: torus delta ~ O(1/n)."""
+    d9 = torus2d(3, 3).delta
+    d36 = torus2d(6, 6).delta
+    ratio = d9 / d36
+    assert 2 < ratio < 8            # ~ 36/9 = 4
+
+
+def test_ring_beats_chain():
+    assert ring(10).delta > chain(10).delta
+
+
+def test_doubly_stochastic_rows_cols():
+    for t in [ring(6), star(6), chain(6)]:
+        np.testing.assert_allclose(t.W.sum(0), 1.0, atol=1e-9)
+        np.testing.assert_allclose(t.W.sum(1), 1.0, atol=1e-9)
+
+
+def test_make_topology_registry():
+    assert make_topology("ring", 12).n == 12
+    assert make_topology("torus", 12).n == 12
+    with pytest.raises(ValueError):
+        make_topology("nope", 4)
