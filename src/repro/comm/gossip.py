@@ -7,6 +7,14 @@ exchange is implemented inside ``shard_map`` with ``jax.lax.ppermute`` of the
 paper's transmitted bits.  Every tensor-parallel / FSDP shard compresses and
 gossips its own slice (coordinate-wise operators commute with sharding).
 
+Two engines for the choco exchange:
+  * ``packed`` (default) — the bucketed flat-buffer engine (comm/packing.py):
+    the whole pytree is packed into a few dtype-homogeneous buckets, each
+    compressed ONCE and shipped as ONE static-shape payload per neighbour —
+    a handful of collective-permutes per round regardless of leaf count;
+  * ``per-leaf`` (legacy) — compress + ppermute every leaf separately; kept
+    as the reference/bench baseline (see benchmarks/bench_collectives.py).
+
 Three exchange modes:
   * ``choco``     — Algorithm 2 lines 4-9 (compressed, error-feedback)
   * ``plain``     — Algorithm 3 line 4-5 (exact neighbour averaging)
@@ -22,6 +30,13 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compression import Compressor
+
+# jax.shard_map landed in 0.5.x; on 0.4.x the same function lives under
+# jax.experimental.shard_map.  Resolve once at import time.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
 
 
 def ring_perm(n: int, shift: int):
@@ -77,10 +92,84 @@ def _axis_edges(n: int) -> int:
     return 2 if n > 2 else (1 if n == 2 else 0)
 
 
+def _pack_align(compressor: Optional[Compressor], pack_align: Optional[int]):
+    """Segment alignment for the packed engine: the compressor's block width
+    for blockwise operators (so bucket compression commutes with packing),
+    the 128-lane unit otherwise."""
+    block = getattr(compressor, "block", None)
+    if pack_align is None:
+        return block or 128
+    if block and pack_align % block != 0:
+        raise ValueError(
+            f"pack_align={pack_align} must be a multiple of the compressor's "
+            f"block width {block}: blockwise selection must never straddle "
+            f"leaf segments, or packed != per-leaf compression")
+    return pack_align
+
+
+def _leaf_routes(state_specs, gossip_axes) -> Optional[list]:
+    """Per-leaf bucket-routing keys from the exchange's PartitionSpecs: the
+    set of NON-gossip mesh axes each leaf is sharded over.  Leaves sharded
+    differently (e.g. model-sharded weights vs model-replicated norm scales)
+    must not share a bucket — bucket-level selection and scales would differ
+    across those shards and de-replicate the replicated leaves."""
+    if state_specs is None:
+        return None
+    gset = set(gossip_axes if isinstance(gossip_axes, (tuple, list))
+               else (gossip_axes,))
+    specs = jax.tree_util.tree_leaves(
+        state_specs, is_leaf=lambda x: isinstance(x, P))
+    routes = []
+    for sp in specs:
+        axes = set()
+        if isinstance(sp, P):
+            for entry in sp:
+                if entry is None:
+                    continue
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    axes.add(a)
+        routes.append(tuple(sorted(axes - gset)))
+    return routes
+
+
+def _flatten_states(x_half, x_hat, s):
+    leaves_h, treedef = jax.tree_util.tree_flatten(x_half)
+    leaves_hat = treedef.flatten_up_to(x_hat)
+    leaves_s = treedef.flatten_up_to(s)
+    return leaves_h, leaves_hat, leaves_s, treedef
+
+
+def _packed_self_half(compressor, key, leaves_h, leaves_hat, spec):
+    """Shared first half of a packed choco round: deltas -> payloads,
+    per-leaf dense q, and the updated public copies x_hat."""
+    from repro.comm.packing import compress_packed
+    deltas = [(lh.astype(lhat.dtype) - lhat).ravel()
+              for lh, lhat in zip(leaves_h, leaves_hat)]
+    payloads, q_leaves = compress_packed(compressor, key, spec, deltas)
+    new_hat = [lhat + q.reshape(lh.shape).astype(lhat.dtype)
+               for lh, lhat, q in zip(leaves_h, leaves_hat, q_leaves)]
+    return payloads, q_leaves, new_hat
+
+
+def _choco_leaf_updates(leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
+                        w_self, w_nbr, gamma):
+    """Algorithm 5 lines 8-10, per leaf (elementwise; XLA fuses these)."""
+    new_s, new_x = [], []
+    for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_leaves, nbr_leaves,
+                                  new_hat):
+        sn = ls + (w_self * qd + w_nbr * nb).reshape(lh.shape).astype(ls.dtype)
+        new_s.append(sn)
+        new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
+    return new_s, new_x
+
+
 def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                             compressor: Compressor, gamma: float,
                             exact_small_leaves: bool = False,
-                            small_leaf_threshold: int = 8_192) -> Callable:
+                            small_leaf_threshold: int = 8_192,
+                            packed: bool = True,
+                            pack_align: Optional[int] = None,
+                            leaf_routes: Optional[list] = None) -> Callable:
     """CHOCO gossip on a 2-D torus of mesh axes (paper Table 1: torus
     delta = O(1/n) vs ring O(1/n^2)).  Each node compresses ONCE and
     ppermutes the payload along every axis ring — 2x the ring's wire for a
@@ -91,6 +180,42 @@ def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     identity = Identity()
     n_edges = sum(_axis_edges(n) for n in sizes)
     w = 1.0 / (1.0 + n_edges)        # uniform-averaging torus W
+    align = _pack_align(compressor, pack_align)
+
+    def packed_local_fn(key, x_half, x_hat, s):
+        from repro.comm.packing import (bucket_dense, make_bucket_spec,
+                                        unpack_leaves)
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        leaves_h, leaves_hat, leaves_s, treedef = _flatten_states(
+            x_half, x_hat, s)
+        spec = make_bucket_spec(leaves_hat, align=align,
+                                exact_small_leaves=exact_small_leaves,
+                                small_leaf_threshold=small_leaf_threshold,
+                                routes=leaf_routes)
+        payloads, q_leaves, new_hat = _packed_self_half(
+            compressor, key, leaves_h, leaves_hat, spec)
+
+        nbr_bufs = [jnp.zeros((b.size,), b.dtype) for b in spec.buckets]
+        for a, n in zip(axes, sizes):
+            if n < 2:
+                continue
+            got = jax.lax.ppermute(payloads, a, ring_perm(n, 1))
+            nbr_bufs = [acc + bucket_dense(g, b)
+                        for acc, g, b in zip(nbr_bufs, got, spec.buckets)]
+            if n > 2:
+                got = jax.lax.ppermute(payloads, a, ring_perm(n, -1))
+                nbr_bufs = [acc + bucket_dense(g, b)
+                            for acc, g, b in zip(nbr_bufs, got, spec.buckets)]
+        nbr_leaves = unpack_leaves(spec, nbr_bufs)
+
+        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_leaves,
+                                           nbr_leaves, new_hat, w, w, gamma)
+        unflatten = treedef.unflatten
+        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+
+    if packed:
+        return packed_local_fn
 
     def local_fn(key, x_half, x_hat, s):
         for a in axes:
@@ -123,12 +248,8 @@ def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                 got = jax.lax.ppermute(payloads, a, ring_perm(n, -1))
                 nbr_sum = [acc + dfn(g) for acc, dfn, g in zip(nbr_sum, dense_fns, got)]
 
-        new_s, new_x = [], []
-        for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_dense, nbr_sum, new_hat):
-            sn = ls + (w * qd + w * nb).reshape(lh.shape).astype(ls.dtype)
-            new_s.append(sn)
-            new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
-
+        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_dense,
+                                           nbr_sum, new_hat, w, w, gamma)
         unflatten = treedef.unflatten
         return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
 
@@ -137,25 +258,71 @@ def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
 
 def make_choco_gossip_fn(*, axis: str, axis_size: int, compressor: Compressor,
                          gamma: float, exact_small_leaves: bool = False,
-                         small_leaf_threshold: int = 8_192) -> Callable:
+                         small_leaf_threshold: int = 8_192,
+                         packed: bool = True,
+                         pack_align: Optional[int] = None,
+                         leaf_routes: Optional[list] = None) -> Callable:
     """Returns local_fn(key, x_half, x_hat, s) -> (x, x_hat, s) for shard_map.
 
-    Implements (per leaf, per local shard):
+    Implements (per local shard):
         q      = Q(x_half - x_hat)
         x_hat += q
         s     += sum_j w_ij q_j            (self + ring neighbours, ppermute'd)
         x      = x_half + gamma (s - x_hat)
 
+    packed=True (default): bucketed flat-buffer engine — the pytree is packed
+    into a few dtype-homogeneous buckets (spec from comm/packing.py), each
+    compressed once and shipped as one static-shape payload per neighbour.
+    packed=False: legacy per-leaf compression + one ppermute per leaf.
+
     exact_small_leaves: leaves below the threshold (norm scales, biases) ship
     uncompressed — for a top-1% sparsifier the (value, index) pair costs 8
     bytes/coordinate, so compressing a 4 KB norm vector saves nothing while
     adding top-k latency; beyond-paper toggle, off for paper-faithful runs.
+    In the packed engine this is a bucket-routing rule: small leaves go to a
+    dense "exact" bucket instead of taking a per-leaf branch.
     """
     from repro.core.compression import Identity
     identity = Identity()
     w_self, w_nbr = ring_weights(axis_size)
     fwd = ring_perm(axis_size, 1)     # receive from left neighbour
     bwd = ring_perm(axis_size, -1)    # receive from right neighbour
+    align = _pack_align(compressor, pack_align)
+
+    def packed_local_fn(key, x_half, x_hat, s):
+        from repro.comm.packing import (bucket_dense, make_bucket_spec,
+                                        payloads_dense_leaves, unpack_leaves)
+        # distinct randomness per gossip node and per model/fsdp shard
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+        leaves_h, leaves_hat, leaves_s, treedef = _flatten_states(
+            x_half, x_hat, s)
+        spec = make_bucket_spec(leaves_hat, align=align,
+                                exact_small_leaves=exact_small_leaves,
+                                small_leaf_threshold=small_leaf_threshold,
+                                routes=leaf_routes)
+        payloads, q_leaves, new_hat = _packed_self_half(
+            compressor, key, leaves_h, leaves_hat, spec)
+
+        if axis_size == 1:
+            nbr_leaves = [q * 0.0 for q in q_leaves]
+        elif axis_size == 2:
+            got = jax.lax.ppermute(payloads, axis, fwd)
+            nbr_leaves = payloads_dense_leaves(spec, got)
+        else:
+            got_l = jax.lax.ppermute(payloads, axis, fwd)
+            got_r = jax.lax.ppermute(payloads, axis, bwd)
+            nbr_bufs = [bucket_dense(l, b) + bucket_dense(r, b)
+                        for l, r, b in zip(got_l, got_r, spec.buckets)]
+            nbr_leaves = unpack_leaves(spec, nbr_bufs)
+
+        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_leaves,
+                                           nbr_leaves, new_hat,
+                                           w_self, w_nbr, gamma)
+        unflatten = treedef.unflatten
+        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+
+    if packed:
+        return packed_local_fn
 
     def local_fn(key, x_half, x_hat, s):
         # distinct randomness per gossip node and per model/fsdp shard
@@ -190,12 +357,9 @@ def make_choco_gossip_fn(*, axis: str, axis_size: int, compressor: Compressor,
             nbr_sum = [dfn(l) + dfn(r)
                        for dfn, l, r in zip(dense_fns, got_l, got_r)]
 
-        new_s, new_x = [], []
-        for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_dense, nbr_sum, new_hat):
-            sn = ls + (w_self * qd + w_nbr * nb).reshape(lh.shape).astype(ls.dtype)
-            new_s.append(sn)
-            new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
-
+        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_dense,
+                                           nbr_sum, new_hat,
+                                           w_self, w_nbr, gamma)
         unflatten = treedef.unflatten
         return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
 
@@ -237,11 +401,14 @@ def make_allreduce_fn(*, axis: str, axis_size: int) -> Callable:
 def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
                          compressor: Optional[Compressor] = None,
                          gamma: float = 1.0, exact_small_leaves: bool = False,
-                         small_leaf_threshold: int = 8_192) -> Callable:
+                         small_leaf_threshold: int = 8_192,
+                         packed: bool = True,
+                         pack_align: Optional[int] = None) -> Callable:
     """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
 
     state_specs: pytree of PartitionSpec matching the param pytree (with the
-    leading node dim mapped to `axis`).
+    leading node dim mapped to `axis`).  packed selects the bucketed
+    flat-buffer engine (default) vs the legacy per-leaf exchange.
     """
     if isinstance(axis, (tuple, list)):        # 2-D torus gossip
         sizes = tuple(mesh.shape[a] for a in axis)
@@ -250,8 +417,10 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
         local_fn = make_choco_gossip_2d_fn(
             axes=tuple(axis), sizes=sizes, compressor=compressor, gamma=gamma,
             exact_small_leaves=exact_small_leaves,
-            small_leaf_threshold=small_leaf_threshold)
-        return jax.shard_map(
+            small_leaf_threshold=small_leaf_threshold,
+            packed=packed, pack_align=pack_align,
+            leaf_routes=_leaf_routes(state_specs, axis))
+        return shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(), state_specs, state_specs, state_specs),
             out_specs=(state_specs, state_specs, state_specs),
@@ -261,7 +430,9 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
         local_fn = make_choco_gossip_fn(axis=axis, axis_size=axis_size,
                                         compressor=compressor, gamma=gamma,
                                         exact_small_leaves=exact_small_leaves,
-                                        small_leaf_threshold=small_leaf_threshold)
+                                        small_leaf_threshold=small_leaf_threshold,
+                                        packed=packed, pack_align=pack_align,
+                                        leaf_routes=_leaf_routes(state_specs, axis))
     elif mode == "plain":
         local_fn = make_plain_gossip_fn(axis=axis, axis_size=axis_size)
     elif mode == "allreduce":
@@ -269,7 +440,7 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
     else:
         raise ValueError(mode)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), state_specs, state_specs, state_specs),
         out_specs=(state_specs, state_specs, state_specs),

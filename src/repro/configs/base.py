@@ -190,6 +190,13 @@ class ChocoConfig:
     # dtype of the error-feedback states x_hat and s (beyond-paper memory
     # optimisation: bf16 halves the 2N-state overhead and the wire payload)
     state_dtype: str = "float32"
+    # bucketed flat-buffer gossip engine (comm/packing.py): pack the pytree
+    # into a few dtype-homogeneous buckets, compress once per bucket, ship
+    # one payload per neighbour.  False = legacy per-leaf exchange.
+    packed_gossip: bool = True
+    # segment alignment inside compressed buckets; None = the compressor's
+    # block width (block_top_k) or the 128-lane unit
+    pack_align: Optional[int] = None
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

@@ -1,8 +1,9 @@
 """CHOCO core: compression operators, gossip topologies, CHOCO-Gossip /
 CHOCO-SGD, and the baselines the paper compares against."""
-from .compression import (Compressor, Identity, RandK, TopK, QSGD, SignNorm,
-                          RandomizedGossip, make_compressor,
-                          SparsePayload, QuantPayload, DensePayload)
+from .compression import (Compressor, Identity, RandK, TopK, BlockTopK, QSGD,
+                          SignNorm, RandomizedGossip, make_compressor,
+                          SparsePayload, QuantPayload, DensePayload,
+                          PackedSparsePayload, PackedQuantPayload)
 from .topology import (Topology, ring, torus2d, fully_connected, chain, star,
                        hypercube, make_topology)
 from .choco_gossip import (GossipState, EfficientGossipState, init_state,

@@ -97,6 +97,72 @@ class DensePayload:
         return int(self.x.size) * self.x.dtype.itemsize * 8
 
 
+@register_pytree_node_class
+@dataclasses.dataclass
+class PackedSparsePayload:
+    """Blockwise top-k wire format for a flat (possibly packed) buffer:
+    the k largest-magnitude coordinates of every `block`-wide row.
+
+    Shipping (R, k) values + (R, k) int32 within-block indices keeps the
+    payload shape static per bucket — the property the bucketed gossip
+    engine (comm/packing.py) needs so ONE ppermute moves a whole bucket.
+    """
+    values: jax.Array          # (R, k)
+    indices: jax.Array         # (R, k) int32, position within the block
+    dim: int                   # static: flat length reconstructed by dense()
+    block: int                 # static: row width, multiple of 128
+
+    def tree_flatten(self):
+        return (self.values, self.indices), (self.dim, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+    def dense(self) -> jax.Array:
+        R, _ = self.values.shape
+        rows = jnp.zeros((R, self.block), self.values.dtype)
+        rows = rows.at[jnp.arange(R)[:, None], self.indices].set(self.values)
+        return rows.reshape(R * self.block)[: self.dim]
+
+    def wire_bits(self) -> int:
+        R, k = self.values.shape
+        return int(R) * int(k) * (self.values.dtype.itemsize * 8 + 32)
+
+
+@register_pytree_node_class
+@dataclasses.dataclass
+class PackedQuantPayload:
+    """Per-coordinate integer codes + one scale for a packed bucket.
+
+    Same wire format as QuantPayload, but covering a packed buffer whose
+    leaf segments sit at block-aligned offsets: dense() must reproduce the
+    FULL padded layout (`dim` = buffer length; padding quantizes to zero
+    codes in place, it is never stripped — segment offsets would shift).
+    `logical` (= sum of leaf sizes) is what wire accounting charges for:
+    a production wire stream would run-length the interstitial zeros.
+    """
+    codes: jax.Array           # (dim,) small int, padded bucket layout
+    scale: jax.Array           # () f32
+    bits_per_coord: int        # static, for accounting
+    dim: int                   # static: padded buffer length (= codes size)
+    logical: int               # static: unpadded coordinate count
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits_per_coord, self.dim,
+                                          self.logical)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1], aux[2])
+
+    def dense(self) -> jax.Array:
+        return self.codes[: self.dim].astype(jnp.float32) * self.scale
+
+    def wire_bits(self) -> int:
+        return int(self.logical) * self.bits_per_coord + 32
+
+
 # ---------------------------------------------------------------------------
 # Operators
 # ---------------------------------------------------------------------------
@@ -203,6 +269,47 @@ class TopK(Compressor):
         return _resolve_k(d, self.k, self.fraction) * 64
 
 
+class BlockTopK(Compressor):
+    """TPU-native blockwise top-k (the kernels/topk.py selection rule): keep
+    the k_b largest-magnitude coordinates of every `block`-wide row.
+
+    Assumption 1 holds per block with omega = k_b/block (Stich et al. 2018,
+    Lemma A.1 applied blockwise), hence globally with the same omega.
+    Blockwise selection *commutes with block-aligned concatenation*: the
+    bucketed flat-buffer gossip engine (comm/packing.py) packs leaf segments
+    at block boundaries, so compressing a packed bucket once is bit-for-bit
+    identical to compressing every leaf separately — with a single top-k
+    launch per bucket instead of one per leaf.
+    """
+    name = "block_top_k"
+    unbiased = False
+    stochastic = False
+
+    def __init__(self, k_per_block: Optional[int] = None,
+                 fraction: Optional[float] = None, block: int = 128):
+        assert (k_per_block is None) != (fraction is None)
+        assert block % 128 == 0, "block must be a multiple of the 128-lane unit"
+        self.k_per_block, self.fraction, self.block = k_per_block, fraction, block
+
+    def _kb(self) -> int:
+        if self.k_per_block is not None:
+            return max(1, min(int(self.k_per_block), self.block))
+        return max(1, min(self.block, int(math.ceil(self.fraction * self.block))))
+
+    def compress(self, key, x):
+        from repro.kernels.ops import block_topk_select
+        d = x.size
+        vals, idx = block_topk_select(x.ravel(), self._kb(), block=self.block)
+        return PackedSparsePayload(vals, idx, d, self.block)
+
+    def omega(self, d):
+        return min(1.0, self._kb() / self.block)
+
+    def wire_bits(self, d):
+        n_blocks = -(-d // self.block)
+        return n_blocks * self._kb() * 64
+
+
 class QSGD(Compressor):
     """qsgd_s random quantization (Alistarh et al. 2017), *rescaled by 1/tau*
     so that (7) holds with omega = 1/tau, tau = 1 + min(d/s^2, sqrt(d)/s).
@@ -244,9 +351,11 @@ class QSGD(Compressor):
         return 1.0 / self._tau(d)
 
     def wire_bits(self, d):
-        # paper §5.1 accounting: log2(s) bits per coordinate (s=2^4 -> 4 bits,
-        # s=2^8 -> 8 bits) + one f32 norm
-        return d * int(math.ceil(math.log2(self.s))) + 32
+        # must match the wire format compress() actually emits: integer codes
+        # in [-s, s] need ceil(log2(2s+1)) magnitude bits + 1 sign bit per
+        # coordinate, plus one f32 scale.  (The paper's §5.1 log2(s) figure
+        # assumes an entropy-coded stream; we account for the raw codes.)
+        return d * (int(math.ceil(math.log2(2 * self.s + 1))) + 1) + 32
 
 
 class SignNorm(Compressor):
@@ -261,7 +370,8 @@ class SignNorm(Compressor):
         d = x.size
         scale = jnp.sum(jnp.abs(x)) / d
         codes = jnp.sign(x)
-        return QuantPayload(codes.astype(jnp.int32), scale.astype(jnp.float32), 1)
+        # int8 codes: 4x fewer ppermuted bytes than the old int32 stream
+        return QuantPayload(codes.astype(jnp.int8), scale.astype(jnp.float32), 1)
 
     def omega(self, d):
         return 1.0 / d
@@ -293,6 +403,7 @@ _REGISTRY = {
     "identity": lambda **kw: Identity(),
     "rand_k": lambda **kw: RandK(**kw),
     "top_k": lambda **kw: TopK(**kw),
+    "block_top_k": lambda **kw: BlockTopK(**kw),
     "qsgd": lambda **kw: QSGD(**kw),
     "sign": lambda **kw: SignNorm(),
     "randomized_gossip": lambda **kw: RandomizedGossip(**kw),

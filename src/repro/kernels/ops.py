@@ -49,6 +49,25 @@ def block_topk_compress_vector(x, k_per_block: int, *, interpret: bool = True):
     return _from_tiles(xt * mask, d)
 
 
+@functools.partial(jax.jit, static_argnames=("k_per_block", "block"))
+def block_topk_select(x, k_per_block: int, *, block: int = 128):
+    """Flat blockwise top-k *payload extraction*: one batched launch for the
+    whole vector, the compact counterpart of ``block_topk_mask`` (same
+    selection rule; the mask kernel produces the dense masked q on TPU, this
+    produces the static-shape wire payload).
+
+    x: (d,) -> (values (R, k), indices (R, k) int32) with R = ceil(d/block);
+    the tail block is zero-padded, so padded positions carry zero values.
+    """
+    assert block % LANES == 0
+    d = x.size
+    R = -(-d // block)
+    rows = jnp.pad(x.ravel(), (0, R * block - d)).reshape(R, block)
+    _, idx = jax.lax.top_k(jnp.abs(rows), k_per_block)
+    vals = jnp.take_along_axis(rows, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def ef_gossip_update_vector(x_half, x_hat, s, q_self, q_nbr,
                             w_self, w_nbr, gamma, *, interpret: bool = True):

@@ -28,6 +28,13 @@ def main(argv=None):
     ap.add_argument("--fraction", type=float, default=0.01)
     ap.add_argument("--qsgd-s", type=int, default=None)
     ap.add_argument("--state-dtype", default="float32")
+    ap.add_argument("--gossip-engine", default="packed",
+                    choices=["packed", "per-leaf"],
+                    help="bucketed flat-buffer exchange (default) vs legacy "
+                         "per-leaf compress+ppermute")
+    ap.add_argument("--exact-small-leaves", action="store_true",
+                    help="route leaves <= 8192 elems to the uncompressed "
+                         "exact bucket (norm scales, biases)")
     ap.add_argument("--optimizer", default="momentum")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--heterogeneity", type=float, default=1.0)
@@ -74,7 +81,9 @@ def main(argv=None):
     trainer = DecentralizedTrainer(
         model=model,
         choco=ChocoConfig(compressor=args.compressor, comp_kwargs=comp_kwargs,
-                          gossip_axis=gossip_axis, state_dtype=args.state_dtype),
+                          gossip_axis=gossip_axis, state_dtype=args.state_dtype,
+                          packed_gossip=(args.gossip_engine == "packed"),
+                          exact_small_leaves=args.exact_small_leaves),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),

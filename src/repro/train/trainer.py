@@ -160,7 +160,9 @@ class DecentralizedTrainer:
             mode=self.mode, mesh=self.mesh, state_specs=specs,
             axis=self.gossip_axis, compressor=self.compressor, gamma=self.gamma,
             exact_small_leaves=self.choco.exact_small_leaves,
-            small_leaf_threshold=self.choco.small_leaf_threshold)
+            small_leaf_threshold=self.choco.small_leaf_threshold,
+            packed=self.choco.packed_gossip,
+            pack_align=self.choco.pack_align)
 
     # -- jit with shardings -----------------------------------------------------
 

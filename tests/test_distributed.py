@@ -10,6 +10,10 @@ import textwrap
 
 import pytest
 
+# every test here compiles shard_map graphs in an 8-device subprocess:
+# deselect with -m "not slow" for the fast inner loop (see pytest.ini)
+pytestmark = [pytest.mark.slow, pytest.mark.distributed]
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -28,11 +32,13 @@ def run_sub(body: str, timeout=420):
     return r.stdout
 
 
-def test_distributed_choco_matches_matrix_simulator():
-    """The shard_map/ppermute gossip reproduces the (n,d) matrix simulator
-    exactly (same compressor randomness is injected via identical fold-ins is
-    impractical, so we use the deterministic top_k operator)."""
-    run_sub("""
+@pytest.mark.parametrize("packed", [True, False])
+def test_distributed_choco_matches_matrix_simulator(packed):
+    """The shard_map/ppermute gossip — both the bucketed flat-buffer engine
+    and the legacy per-leaf exchange — reproduces the (n,d) matrix simulator
+    (injecting identical compressor randomness via fold-ins is impractical,
+    so we use the deterministic top_k operator)."""
+    run_sub(f"""
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.comm.gossip import make_gossip_exchange
         from repro.core.choco_gossip import (choco_gossip_round_efficient,
@@ -52,12 +58,13 @@ def test_distributed_choco_matches_matrix_simulator():
             st = choco_gossip_round_efficient(st, W, gamma, comp)
 
         # distributed: leaves (n, d) sharded over 'data'
-        specs = {"w": P("data", None)}
+        specs = {{"w": P("data", None)}}
         ex = make_gossip_exchange(mode="choco", mesh=mesh, state_specs=specs,
-                                  axis="data", compressor=comp, gamma=gamma)
-        x = {"w": x0}
-        xh = {"w": jnp.zeros_like(x0)}
-        s = {"w": jnp.zeros_like(x0)}
+                                  axis="data", compressor=comp, gamma=gamma,
+                                  packed={packed})
+        x = {{"w": x0}}
+        xh = {{"w": jnp.zeros_like(x0)}}
+        s = {{"w": jnp.zeros_like(x0)}}
         for i in range(5):
             x, xh, s = ex(jax.random.PRNGKey(i), x, xh, s)
         np.testing.assert_allclose(np.asarray(x["w"]), np.asarray(st.x),
@@ -65,6 +72,42 @@ def test_distributed_choco_matches_matrix_simulator():
         np.testing.assert_allclose(np.asarray(xh["w"]), np.asarray(st.x_hat),
                                    rtol=1e-4, atol=1e-5)
         print("MATCH")
+    """)
+
+
+def test_distributed_packed_multi_leaf_matches_per_leaf():
+    """Bucketed engine == legacy per-leaf exchange, bit for bit, on a
+    multi-leaf tree with unaligned sizes (blockwise operator commutes with
+    the engine's block-aligned packing)."""
+    run_sub("""
+        from jax.sharding import PartitionSpec as P
+        from repro.comm.gossip import make_gossip_exchange
+        from repro.core import BlockTopK
+
+        n = 8
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        tree0 = {"a": jax.random.normal(jax.random.PRNGKey(1), (n, 384)),
+                 "b": jax.random.normal(jax.random.PRNGKey(2), (n, 130)),
+                 "c": jax.random.normal(jax.random.PRNGKey(3), (n, 512))}
+        specs = {k: P("data", None) for k in tree0}
+        comp = BlockTopK(k_per_block=5, block=128)
+        outs = {}
+        for packed in (True, False):
+            ex = make_gossip_exchange(mode="choco", mesh=mesh,
+                                      state_specs=specs, axis="data",
+                                      compressor=comp, gamma=0.07,
+                                      packed=packed)
+            x = dict(tree0)
+            xh = jax.tree.map(jnp.zeros_like, tree0)
+            s = jax.tree.map(jnp.zeros_like, tree0)
+            for i in range(3):
+                x, xh, s = ex(jax.random.PRNGKey(i), x, xh, s)
+            outs[packed] = (x, xh, s)
+        for j in range(3):
+            for k in tree0:
+                np.testing.assert_array_equal(np.asarray(outs[True][j][k]),
+                                              np.asarray(outs[False][j][k]))
+        print("PACKED == PER-LEAF")
     """)
 
 

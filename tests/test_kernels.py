@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.qsgd import qsgd_quantize, qsgd_dequantize

@@ -1,0 +1,257 @@
+"""Bucketed flat-buffer gossip engine (comm/packing.py): spec construction,
+pack/unpack round-trip, packed-vs-per-leaf compression equivalence, and the
+paper's Assumption-1 contraction per bucket."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.packing import (bucket_dense, compress_packed,
+                                make_bucket_spec, pack_leaves, pack_pytree,
+                                packed_wire_bits, unpack_leaves, unpack_pytree)
+from repro.core.compression import (BlockTopK, DensePayload, Identity, QSGD,
+                                    RandK, SignNorm, TopK)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {"emb": jax.random.normal(ks[0], (64, 128), dtype),
+            "w": jax.random.normal(ks[1], (33, 7), dtype),    # 231: unaligned
+            "ln": jax.random.normal(ks[2], (96,), dtype),
+            "b": jax.random.normal(ks[3], (4, 4, 8), dtype)}
+
+
+def _flat(tree):
+    return [l.ravel() for l in jax.tree_util.tree_leaves(tree)]
+
+
+# -- spec ---------------------------------------------------------------------
+
+def test_spec_dtype_homogeneous_buckets():
+    tree = {"a": jnp.zeros((256,), jnp.float32),
+            "b": jnp.zeros((300,), jnp.bfloat16),
+            "c": jnp.zeros((128,), jnp.float32)}
+    spec = make_bucket_spec(tree)
+    assert spec.n_buckets == 2
+    for slot in spec.slots:
+        assert spec.buckets[slot.bucket].dtype == slot.dtype
+        assert slot.offset % spec.align == 0          # lane-aligned segments
+    by_dtype = {b.dtype.name: b for b in spec.buckets}
+    assert by_dtype["float32"].logical == 256 + 128
+    assert by_dtype["bfloat16"].logical == 300
+    assert by_dtype["bfloat16"].size == 384           # padded to 128 lanes
+
+
+def test_spec_routes_split_buckets():
+    tree = {"a": jnp.zeros((256,)), "b": jnp.zeros((256,))}
+    spec = make_bucket_spec(tree, routes=[("model",), ()])
+    assert spec.n_buckets == 2
+    assert make_bucket_spec(tree, routes=[(), ()]).n_buckets == 1
+
+
+def test_spec_exact_small_leaf_routing():
+    tree = {"big": jnp.zeros((9000,)), "tiny": jnp.zeros((64,))}
+    spec = make_bucket_spec(tree, exact_small_leaves=True,
+                            small_leaf_threshold=8_192)
+    assert spec.n_buckets == 2
+    kinds = {b.exact for b in spec.buckets}
+    assert kinds == {True, False}
+
+
+def test_spec_max_bucket_split():
+    tree = [jnp.zeros((600,)) for _ in range(4)]
+    spec = make_bucket_spec(tree, max_bucket_elems=1500)
+    assert spec.n_buckets == 2                         # 2 x 640 per bucket
+    assert all(b.size <= 1500 for b in spec.buckets)
+
+
+# -- pack / unpack ------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pack_unpack_roundtrip_bit_for_bit(dtype):
+    tree = _tree(3, dtype)
+    spec = make_bucket_spec(tree)
+    out = unpack_pytree(spec, pack_pytree(spec, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_leaves_buffer_layout():
+    tree = _tree(4)
+    spec = make_bucket_spec(tree)
+    bufs = pack_leaves(spec, _flat(tree))
+    assert len(bufs) == spec.n_buckets
+    for b, buf in zip(spec.buckets, bufs):
+        assert buf.shape == (b.size,) and buf.dtype == b.dtype
+    flats = _flat(tree)
+    for slot in spec.slots:
+        seg = bufs[slot.bucket][slot.offset:slot.offset + slot.size]
+        np.testing.assert_array_equal(np.asarray(seg), np.asarray(flats[slot.leaf]))
+
+
+# -- packed compression == per-leaf, bit for bit ------------------------------
+
+def test_packed_blocktopk_equals_per_leaf_bit_for_bit():
+    """Blockwise selection commutes with block-aligned packing: compressing
+    the packed bucket once == compressing every leaf separately."""
+    tree = _tree(5)
+    comp = BlockTopK(k_per_block=4, block=128)
+    spec = make_bucket_spec(tree, align=comp.block)
+    flats = _flat(tree)
+    _, q_packed = compress_packed(comp, None, spec, flats)
+    for flat, q in zip(flats, q_packed):
+        q_leaf = comp.compress(None, flat).dense()[: flat.size]
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_leaf))
+
+
+def test_packed_topk_single_leaf_equals_per_leaf_bit_for_bit():
+    """A single-leaf bucket reduces the packed global top-k to the per-leaf
+    path exactly (plumbing check: pad -> top_k -> scatter -> unpack)."""
+    x = jax.random.normal(KEY, (513,))
+    comp = TopK(k=19)
+    spec = make_bucket_spec([x])
+    _, q_packed = compress_packed(comp, None, spec, [x])
+    q_leaf = comp.compress(None, x).dense()
+    np.testing.assert_array_equal(np.asarray(q_packed[0]), np.asarray(q_leaf))
+
+
+def test_packed_exact_bucket_ships_dense():
+    tree = {"big": jax.random.normal(KEY, (9000,)),
+            "tiny": jax.random.normal(jax.random.fold_in(KEY, 1), (64,))}
+    spec = make_bucket_spec(tree, exact_small_leaves=True,
+                            small_leaf_threshold=1_000)
+    flats = _flat(tree)
+    payloads, q = compress_packed(TopK(fraction=0.01), None, spec, flats)
+    leaves = jax.tree_util.tree_leaves(tree)
+    for slot in spec.slots:
+        if spec.buckets[slot.bucket].exact:
+            assert isinstance(payloads[slot.bucket], DensePayload)
+            np.testing.assert_array_equal(np.asarray(q[slot.leaf]),
+                                          np.asarray(leaves[slot.leaf].ravel()))
+        else:
+            assert int(jnp.sum(q[slot.leaf] != 0)) < slot.size * 0.05
+
+
+# -- Assumption 1 per bucket --------------------------------------------------
+
+def _bucket_contraction(comp, n_trials=1):
+    """Monte-Carlo E||Q(x)-x||^2 over the packed engine's per-leaf output."""
+    tree = _tree(7)
+    spec = make_bucket_spec(tree, align=getattr(comp, "block", 128))
+    flats = _flat(tree)
+    d = sum(f.size for f in flats)
+    errs = []
+    for i in range(n_trials if comp.stochastic else 1):
+        _, q = compress_packed(comp, jax.random.PRNGKey(100 + i), spec, flats)
+        errs.append(sum(float(jnp.sum((qi - fi) ** 2))
+                        for qi, fi in zip(q, flats)))
+    lhs = float(np.mean(errs))
+    rhs = (1 - comp.omega(d)) * sum(float(jnp.sum(f * f)) for f in flats)
+    return lhs, rhs
+
+
+def test_bucket_contraction_topk():
+    lhs, rhs = _bucket_contraction(TopK(fraction=0.1))
+    assert lhs <= rhs + 1e-6
+
+
+def test_bucket_contraction_blocktopk():
+    lhs, rhs = _bucket_contraction(BlockTopK(fraction=0.1))
+    assert lhs <= rhs + 1e-6
+
+
+def test_bucket_contraction_qsgd():
+    lhs, rhs = _bucket_contraction(QSGD(16), n_trials=30)
+    assert lhs <= rhs * 1.15 + 1e-6        # MC slack, as in test_compression
+
+
+def test_bucket_contraction_sign():
+    lhs, rhs = _bucket_contraction(SignNorm())
+    assert lhs <= rhs + 1e-6
+
+
+def test_packed_topk_absolute_k_is_per_leaf_budget():
+    """Regression: TopK(k=K) must keep K coords PER LEAF in a multi-leaf
+    bucket (as the per-leaf path does), not K per bucket."""
+    tree = [jax.random.normal(jax.random.PRNGKey(i), (256,)) for i in range(3)]
+    spec = make_bucket_spec(tree)
+    assert spec.n_buckets == 1
+    _, q = compress_packed(TopK(k=10), None, spec, tree)
+    total_nnz = sum(int(jnp.sum(qi != 0)) for qi in q)
+    assert total_nnz == 30
+
+
+def test_packed_randk_budget_and_no_padding_samples():
+    """Regression: RandK must resolve its budget per leaf and sample logical
+    coordinates only — uniform sampling of the padded buffer ships
+    guaranteed-zero padding positions and inflates k."""
+    tree = [jax.random.normal(jax.random.PRNGKey(1), (300,)),
+            jax.random.normal(jax.random.PRNGKey(2), (100,))]  # pads to 512
+    spec = make_bucket_spec(tree)
+    assert spec.n_buckets == 1 and spec.buckets[0].size == 512
+    payloads, q = compress_packed(RandK(fraction=0.1), jax.random.PRNGKey(0),
+                                  spec, tree)
+    assert payloads[0].values.shape == (40,)           # 30 + 10, not 52
+    idx = np.asarray(payloads[0].indices)
+    logical = set(range(300)) | set(range(384, 484))   # slot layouts
+    assert set(idx.tolist()) <= logical
+
+
+def test_pack_align_must_cover_compressor_block():
+    from repro.comm.gossip import _pack_align
+    assert _pack_align(BlockTopK(fraction=0.1, block=256), None) == 256
+    assert _pack_align(TopK(fraction=0.1), None) == 128
+    with pytest.raises(ValueError):
+        _pack_align(BlockTopK(fraction=0.1, block=256), 128)
+
+
+def test_packed_qsgd_large_s_uses_int16():
+    """Regression: s > 127 needs int16 codes — int8 clipping silently halves
+    large coordinates."""
+    x = jnp.zeros((256,)).at[7].set(10.0).at[100].set(0.1)
+    spec = make_bucket_spec([x])
+    payloads, q = compress_packed(QSGD(256, rescale=False),
+                                  jax.random.PRNGKey(0), spec, [x])
+    assert payloads[0].codes.dtype == jnp.int16
+    # dominant coordinate reconstructs within ~1/s relative error
+    assert abs(float(q[0][7]) - 10.0) < 0.1
+
+
+def test_packed_quant_preserves_segment_layout():
+    """Regression: interior segment padding must never shift or truncate the
+    dense reconstruction — trimming the quant codes to the *logical* count
+    would chop the tail of the bucket's last leaf."""
+    # dict leaves sort alphabetically: the unaligned 231-leaf packs BETWEEN
+    # the others, so its 25-element pad is interior, not trailing
+    tree = {"a_big": jnp.ones((8192,)), "m_mid": jnp.ones((231,)),
+            "z_tail": jnp.ones((128,))}
+    spec = make_bucket_spec(tree)
+    assert spec.buckets[0].size > spec.buckets[0].logical   # interior padding
+    flats = _flat(tree)
+    _, q = compress_packed(SignNorm(), None, spec, flats)
+    for flat, qi in zip(flats, q):
+        # all-ones input: sign codes are 1 everywhere, scale = mean|x| = 1
+        np.testing.assert_array_equal(np.asarray(qi), np.ones(flat.size))
+
+
+# -- wire accounting ----------------------------------------------------------
+
+def test_packed_wire_bits_within_10pct_of_per_leaf():
+    tree = {f"w{i}": jnp.zeros((512 + 128 * i, 16)) for i in range(6)}
+    comp = TopK(fraction=0.01)
+    per_leaf = sum(comp.wire_bits(l.size) for l in jax.tree_util.tree_leaves(tree))
+    packed = packed_wire_bits(make_bucket_spec(tree), comp)
+    assert 0.9 * per_leaf <= packed <= 1.1 * per_leaf
+
+
+def test_packed_wire_bits_exact_bucket_counts_dense():
+    tree = {"big": jnp.zeros((9000,)), "tiny": jnp.zeros((64,))}
+    spec = make_bucket_spec(tree, exact_small_leaves=True,
+                            small_leaf_threshold=1_000)
+    comp = TopK(fraction=0.01)
+    bits = packed_wire_bits(spec, comp)
+    assert bits == comp.wire_bits(9000) + 64 * 32

@@ -81,6 +81,8 @@ def test_chunked_leaf_compression_matches_direct():
     assert 0 < nnz <= 2 * k_per_row
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_bf16_ef_state_trainer():
     run_sub("""
         from repro.configs.base import get_config, ChocoConfig
@@ -111,6 +113,8 @@ def test_bf16_ef_state_trainer():
     """)
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_torus_gossip_trainer():
     run_sub("""
         from repro.configs.base import get_config, ChocoConfig
@@ -140,6 +144,8 @@ def test_torus_gossip_trainer():
     """)
 
 
+@pytest.mark.slow
+@pytest.mark.distributed
 def test_exact_small_leaves_ships_dense():
     run_sub("""
         from jax.sharding import PartitionSpec as P
