@@ -1,18 +1,78 @@
-"""Paper Figure 4: plain decentralized SGD (Algorithm 3) across topologies
-(ring / torus / fully-connected) and n in {9, 25, 64}, *sorted* data.
-Derived column: final suboptimality — shows the mild topology effect."""
+"""Paper Figure 4 + schedule-compiler audits.
+
+Sections:
+  * fig4            — plain decentralized SGD (Algorithm 3) across topologies
+                      (ring / torus / fully-connected) and n in {9, 25, 64},
+                      *sorted* data; derived column: final suboptimality.
+  * schedule_compile — rounds (= collective-permute rounds per gossip step)
+                      and compile time per topology: the static contract
+                      EXPERIMENTS.md §Perf E records.  Compilation is pure
+                      Python (never traced), so the times here are the whole
+                      cost — they must stay microseconds-to-milliseconds.
+  * kstep_tradeoff  — k gossip rounds per SGD step (ChocoConfig.gossip_steps):
+                      consensus error after one step vs k x the wire bytes,
+                      on the matrix simulator.
+"""
 import jax
 import jax.numpy as jnp
 
-from repro.core import make_topology, Identity, run_choco_sgd, \
+from repro.core import make_topology, Identity, TopK, run_choco_sgd, \
     experiment_lr_schedule
+from repro.core.choco_gossip import choco_gossip_round_efficient, \
+    init_efficient_state
+from repro.comm.schedule import compile_schedule
 from repro.data.synthetic import make_logreg
 from .common import time_fn, emit
 
 STEPS = 800
 
+SCHEDULED = ("ring", "torus", "hypercube", "star", "chain", "fully_connected")
+
+
+def schedule_compile():
+    for n in (8, 64):
+        for name in SCHEDULED:
+            topo = make_topology(name, n)
+            us = time_fn(lambda: compile_schedule(topo), iters=3, warmup=1)
+            sched = compile_schedule(topo)
+            emit(f"topology/schedule_{name}_n{n}", us,
+                 f"rounds={sched.n_rounds};delta={topo.delta:.4f};"
+                 f"uniform={int(sched.self_weight is not None)}")
+
+
+def kstep_tradeoff():
+    """Hashemi et al. (2020): extra gossip rounds per SGD step buy consensus
+    at k x the wire cost.  One 'step' here = k CHOCO-Gossip rounds from a
+    fresh disagreement (the per-SGD-step situation)."""
+    n, d = 8, 256
+    topo = make_topology("hypercube", n)
+    W = jnp.asarray(topo.W)
+    comp = TopK(k=64)
+    gamma = 0.4                      # practical consensus stepsize
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+    err0 = float(jnp.mean(jnp.sum((x0 - xbar) ** 2, axis=-1)))
+    # one payload send per (src, dst) pair per compiled round — exact for
+    # partial rounds too (star ships 1 edge-pair per round, hypercube all n)
+    sched = compile_schedule(topo)
+    bits_per_round = comp.wire_bits(d) * sum(len(r.perm) for r in sched.rounds)
+    for k in (1, 2, 4, 8):
+        def fn():
+            st = init_efficient_state(x0)
+            for _ in range(k):
+                st = choco_gossip_round_efficient(st, W, gamma, comp)
+            return st
+        us = time_fn(fn, iters=1, warmup=1)
+        st = fn()
+        err = float(jnp.mean(jnp.sum((st.x - xbar) ** 2, axis=-1)))
+        emit(f"topology/kstep_k{k}", us,
+             f"consensus_err={err:.3f};vs_initial={err / err0:.4f};"
+             f"wire_bits={k * bits_per_round}")
+
 
 def run():
+    schedule_compile()
+    kstep_tradeoff()
     for n in (9, 25, 64):
         prob = make_logreg("epsilon", n_nodes=n, sorted_assignment=True,
                            m=1152 * 2, d=256, seed=1)

@@ -8,7 +8,7 @@ def main() -> None:
     from . import bench_consensus, bench_topology, bench_sgd, \
         bench_collectives, bench_kernels
     bench_consensus.run()      # paper Figs 2-3
-    bench_topology.run()       # paper Fig 4
+    bench_topology.run()       # paper Fig 4 + schedule compiler + k-step gossip
     bench_sgd.run()            # paper Figs 5-6
     bench_collectives.run()    # framework: wire bytes choco vs baselines
     bench_kernels.run()        # Pallas kernel targets

@@ -1,11 +1,23 @@
-"""Distributed CHOCO gossip over a device mesh.
+"""Distributed CHOCO gossip over a device mesh, driven by compiled schedules.
 
-The gossip ring lives on one mesh axis (``gossip_axis``): every slice of the
-mesh along that axis is one "node" of the paper's communication graph.  The
-exchange is implemented inside ``shard_map`` with ``jax.lax.ppermute`` of the
-*compressed payload only* — the collective bytes in the compiled HLO are the
-paper's transmitted bits.  Every tensor-parallel / FSDP shard compresses and
-gossips its own slice (coordinate-wise operators commute with sharding).
+The gossip graph lives on one or more mesh axes (``axes``): every slice of
+the mesh along those axes is one "node" of the paper's communication graph.
+The exchange is implemented inside ``shard_map`` with ``jax.lax.ppermute``
+of the *compressed payload only* — the collective bytes in the compiled HLO
+are the paper's transmitted bits.  Every tensor-parallel / FSDP shard
+compresses and gossips its own slice (coordinate-wise operators commute with
+sharding).
+
+Which neighbours exchange, in how many rounds, with what weights, is no
+longer hardcoded: a :class:`~repro.comm.schedule.GossipSchedule` (compiled
+once, pure Python, from any ``core.topology.Topology``) lists the
+permutation rounds of W − I, and this engine replays them — one
+``lax.ppermute`` per round, every round reusing the same packed payloads.
+Ring and torus are now just two compiled schedules; hypercube, star, chain,
+fully-connected, and arbitrary W (via greedy edge coloring) run through the
+identical code path.  A *sequence* of schedules gives time-varying mixing,
+cycled across the ``gossip_steps`` consensus rounds of each SGD step
+(multiple gossip rounds per step: Hashemi et al., NeurIPS 2020).
 
 Two engines for the choco exchange:
   * ``packed`` (default) — the bucketed flat-buffer engine (comm/packing.py):
@@ -18,18 +30,19 @@ Two engines for the choco exchange:
 Three exchange modes:
   * ``choco``     — Algorithm 2 lines 4-9 (compressed, error-feedback)
   * ``plain``     — Algorithm 3 line 4-5 (exact neighbour averaging)
-  * ``allreduce`` — centralized mini-batch SGD baseline (pmean over the axis)
+  * ``allreduce`` — centralized mini-batch SGD baseline (pmean over the axes)
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compression import Compressor
+from repro.comm.schedule import GossipSchedule
 
 # jax.shard_map landed in 0.5.x; on 0.4.x the same function lives under
 # jax.experimental.shard_map.  Resolve once at import time.
@@ -37,21 +50,6 @@ if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:
     from jax.experimental.shard_map import shard_map
-
-
-def ring_perm(n: int, shift: int):
-    return [(i, (i + shift) % n) for i in range(n)]
-
-
-def ring_weights(n: int) -> Tuple[float, float]:
-    """Uniform-averaging ring W (paper Table 1): returns (w_self, w_neighbor).
-    n>=3: degree-2 ring, w = 1/3 each.  n==2: single edge, 1/2 each.
-    n==1: trivial."""
-    if n == 1:
-        return 1.0, 0.0
-    if n == 2:
-        return 0.5, 0.5
-    return 1.0 / 3.0, 1.0 / 3.0
 
 
 def _leaf_keys(key, n: int, salt: int):
@@ -85,11 +83,6 @@ def _compress_leaf(compressor: Compressor, key, flat):
         return jax.vmap(lambda q: q.dense())(p).reshape(R * C)[:d]
 
     return pl_, dense_fn
-
-
-def _axis_edges(n: int) -> int:
-    """Ring edges contributed by one torus axis of size n."""
-    return 2 if n > 2 else (1 if n == 2 else 0)
 
 
 def _pack_align(compressor: Optional[Compressor], pack_align: Optional[int]):
@@ -163,117 +156,124 @@ def _choco_leaf_updates(leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
     return new_s, new_x
 
 
-def make_choco_gossip_2d_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
-                            compressor: Compressor, gamma: float,
-                            exact_small_leaves: bool = False,
-                            small_leaf_threshold: int = 8_192,
-                            packed: bool = True,
-                            pack_align: Optional[int] = None,
-                            leaf_routes: Optional[list] = None) -> Callable:
-    """CHOCO gossip on a 2-D torus of mesh axes (paper Table 1: torus
-    delta = O(1/n) vs ring O(1/n^2)).  Each node compresses ONCE and
-    ppermutes the payload along every axis ring — 2x the ring's wire for a
-    quadratically better spectral gap.  Beyond-paper: the paper analyses the
-    torus but never maps it onto a physical interconnect; here the two axes
-    are pod x data rings of the ICI fabric."""
-    from repro.core.compression import Identity
-    identity = Identity()
-    n_edges = sum(_axis_edges(n) for n in sizes)
-    w = 1.0 / (1.0 + n_edges)        # uniform-averaging torus W
-    align = _pack_align(compressor, pack_align)
+# ---------------------------------------------------------------------------
+# schedule plumbing
+# ---------------------------------------------------------------------------
 
-    def packed_local_fn(key, x_half, x_hat, s):
-        from repro.comm.packing import (bucket_dense, make_bucket_spec,
-                                        unpack_leaves)
-        for a in axes:
-            key = jax.random.fold_in(key, jax.lax.axis_index(a))
-        leaves_h, leaves_hat, leaves_s, treedef = _flatten_states(
-            x_half, x_hat, s)
-        spec = make_bucket_spec(leaves_hat, align=align,
-                                exact_small_leaves=exact_small_leaves,
-                                small_leaf_threshold=small_leaf_threshold,
-                                routes=leaf_routes)
-        payloads, q_leaves, new_hat = _packed_self_half(
-            compressor, key, leaves_h, leaves_hat, spec)
-
-        nbr_bufs = [jnp.zeros((b.size,), b.dtype) for b in spec.buckets]
-        for a, n in zip(axes, sizes):
-            if n < 2:
-                continue
-            got = jax.lax.ppermute(payloads, a, ring_perm(n, 1))
-            nbr_bufs = [acc + bucket_dense(g, b)
-                        for acc, g, b in zip(nbr_bufs, got, spec.buckets)]
-            if n > 2:
-                got = jax.lax.ppermute(payloads, a, ring_perm(n, -1))
-                nbr_bufs = [acc + bucket_dense(g, b)
-                            for acc, g, b in zip(nbr_bufs, got, spec.buckets)]
-        nbr_leaves = unpack_leaves(spec, nbr_bufs)
-
-        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_leaves,
-                                           nbr_leaves, new_hat, w, w, gamma)
-        unflatten = treedef.unflatten
-        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
-
-    if packed:
-        return packed_local_fn
-
-    def local_fn(key, x_half, x_hat, s):
-        for a in axes:
-            key = jax.random.fold_in(key, jax.lax.axis_index(a))
-        leaves_h, treedef = jax.tree_util.tree_flatten(x_half)
-        leaves_hat = treedef.flatten_up_to(x_hat)
-        leaves_s = treedef.flatten_up_to(s)
-        keys = _leaf_keys(key, len(leaves_h), 0)
-
-        payloads, dense_fns, new_hat, q_dense = [], [], [], []
-        for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
-            delta = (lh.astype(lhat.dtype) - lhat).ravel()
-            comp_i = (identity if exact_small_leaves
-                      and delta.size <= small_leaf_threshold else compressor)
-            pl, dfn = _compress_leaf(
-                comp_i, keys[i] if comp_i.stochastic else None, delta)
-            payloads.append(pl)
-            dense_fns.append(dfn)
-            qd = dfn(pl)
-            q_dense.append(qd)
-            new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
-
-        nbr_sum = [q * 0.0 for q in q_dense]
-        for a, n in zip(axes, sizes):
-            if n < 2:
-                continue
-            got = jax.lax.ppermute(payloads, a, ring_perm(n, 1))
-            nbr_sum = [acc + dfn(g) for acc, dfn, g in zip(nbr_sum, dense_fns, got)]
-            if n > 2:
-                got = jax.lax.ppermute(payloads, a, ring_perm(n, -1))
-                nbr_sum = [acc + dfn(g) for acc, dfn, g in zip(nbr_sum, dense_fns, got)]
-
-        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_dense,
-                                           nbr_sum, new_hat, w, w, gamma)
-        unflatten = treedef.unflatten
-        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
-
-    return local_fn
+def _weight_groups(schedule: GossipSchedule):
+    """Consecutive rounds sharing one receive weight merge into a group:
+    their dense payloads accumulate unweighted and the weight applies once.
+    (A uniform ring's +1/-1 shifts are one group — reproducing the
+    pre-schedule engine's ``w_nbr * (left + right)`` arithmetic exactly.)"""
+    groups = []
+    for rnd in schedule.rounds:
+        wkey = rnd.weight if rnd.weight is not None else rnd.weights
+        if groups and groups[-1][0] == wkey:
+            groups[-1][1].append(rnd.perm)
+        else:
+            groups.append([wkey, [rnd.perm]])
+    return [(w, tuple(perms)) for w, perms in groups]
 
 
-def make_choco_gossip_fn(*, axis: str, axis_size: int, compressor: Compressor,
-                         gamma: float, exact_small_leaves: bool = False,
-                         small_leaf_threshold: int = 8_192,
-                         packed: bool = True,
-                         pack_align: Optional[int] = None,
-                         leaf_routes: Optional[list] = None) -> Callable:
+def _flat_node_index(axes: Tuple[str, ...], sizes: Tuple[int, ...]):
+    """Row-major flat node id over the gossip axes — matches ppermute's
+    flattening of a tuple axis name."""
+    idx = jax.lax.axis_index(axes[0])
+    for a, sz in zip(axes[1:], sizes[1:]):
+        idx = idx * sz + jax.lax.axis_index(a)
+    return idx
+
+
+def _weight_value(w, flat_idx_fn):
+    """Uniform weights stay python floats (weak-typed: they convert to the
+    payload dtype, preserving the legacy engines' arithmetic bit for bit);
+    per-node weights gather one scalar by the local node id (flat_idx_fn is
+    only invoked on that branch)."""
+    if isinstance(w, float):
+        return w
+    return jnp.asarray(w, jnp.float32)[flat_idx_fn()]
+
+
+def _accumulate_rounds(payloads, perms, axis_arg, dense_fn):
+    """sum_r dense(ppermute_r(payloads)) — no zero-init, so a single-round
+    group is exactly the received payload's dense form."""
+    acc = None
+    for perm in perms:
+        got = jax.lax.ppermute(payloads, axis_arg, list(perm))
+        dl = dense_fn(got)
+        acc = dl if acc is None else [a + d for a, d in zip(acc, dl)]
+    return acc
+
+
+def _neighbor_sum(payloads, groups, axis_arg, dense_fn, flat_idx_fn):
+    """Weighted neighbour aggregate  sum_j w_ij q_j  (j != i) as flat
+    buffers.  Returns (buffers, w_nbr): a single weight group defers its
+    scalar to the caller (applied leaf-wise, matching the legacy engines);
+    multiple groups weight each group's accumulator and pre-sum, so the
+    caller applies w_nbr = 1.0."""
+    if len(groups) == 1:
+        w, perms = groups[0]
+        acc = _accumulate_rounds(payloads, perms, axis_arg, dense_fn)
+        return acc, _weight_value(w, flat_idx_fn)
+    total = None
+    for w, perms in groups:
+        acc = _accumulate_rounds(payloads, perms, axis_arg, dense_fn)
+        wv = _weight_value(w, flat_idx_fn)
+        contrib = [wv * a for a in acc]
+        total = contrib if total is None else [t + c
+                                               for t, c in zip(total, contrib)]
+    return total, 1.0
+
+
+class _LazyFlatIndex:
+    """Computes the flat node id at most once per traced exchange (only
+    schedules with per-node weights need it)."""
+
+    def __init__(self, axes, sizes):
+        self.axes, self.sizes, self.value = axes, sizes, None
+
+    def __call__(self):
+        if self.value is None:
+            self.value = _flat_node_index(self.axes, self.sizes)
+        return self.value
+
+
+def _self_weight(schedule: GossipSchedule, flat_idx_fn):
+    if schedule.self_weight is not None:
+        return schedule.self_weight
+    return jnp.asarray(schedule.self_weights, jnp.float32)[flat_idx_fn()]
+
+
+# ---------------------------------------------------------------------------
+# choco engines
+# ---------------------------------------------------------------------------
+
+def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                           schedules: Tuple[GossipSchedule, ...],
+                           compressor: Compressor, gamma: float,
+                           gossip_steps: int = 1,
+                           exact_small_leaves: bool = False,
+                           small_leaf_threshold: int = 8_192,
+                           packed: bool = True,
+                           pack_align: Optional[int] = None,
+                           leaf_routes: Optional[list] = None) -> Callable:
     """Returns local_fn(key, x_half, x_hat, s) -> (x, x_hat, s) for shard_map.
 
-    Implements (per local shard):
-        q      = Q(x_half - x_hat)
+    Implements, per local shard and ``gossip_steps`` times per call
+    (schedule t = schedules[t % len(schedules)] — time-varying mixing):
+
+        q      = Q(x - x_hat)
         x_hat += q
-        s     += sum_j w_ij q_j            (self + ring neighbours, ppermute'd)
-        x      = x_half + gamma (s - x_hat)
+        s     += sum_j w_ij q_j          (schedule rounds, ppermute'd)
+        x      = x + gamma (s - x_hat)
 
     packed=True (default): bucketed flat-buffer engine — the pytree is packed
     into a few dtype-homogeneous buckets (spec from comm/packing.py), each
     compressed once and shipped as one static-shape payload per neighbour.
-    packed=False: legacy per-leaf compression + one ppermute per leaf.
+    The spec (and flatten) is built ONCE per exchange, so k gossip steps
+    amortize k compressions into one pack.
+    packed=False: legacy per-leaf compression + one ppermute per leaf per
+    round; kept as the reference engine.
 
     exact_small_leaves: leaves below the threshold (norm scales, biases) ship
     uncompressed — for a top-1% sparsifier the (value, index) pair costs 8
@@ -284,159 +284,205 @@ def make_choco_gossip_fn(*, axis: str, axis_size: int, compressor: Compressor,
     """
     from repro.core.compression import Identity
     identity = Identity()
-    w_self, w_nbr = ring_weights(axis_size)
-    fwd = ring_perm(axis_size, 1)     # receive from left neighbour
-    bwd = ring_perm(axis_size, -1)    # receive from right neighbour
+    n = 1
+    for sz in sizes:
+        n *= sz
+    for sch in schedules:
+        assert sch.n == n, f"schedule n={sch.n} != mesh gossip extent {n}"
+    assert gossip_steps >= 1
+    axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
     align = _pack_align(compressor, pack_align)
+    compiled = [(sch, _weight_groups(sch)) for sch in schedules]
 
     def packed_local_fn(key, x_half, x_hat, s):
         from repro.comm.packing import (bucket_dense, make_bucket_spec,
-                                        payloads_dense_leaves, unpack_leaves)
+                                        unpack_leaves)
         # distinct randomness per gossip node and per model/fsdp shard
-        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
         leaves_h, leaves_hat, leaves_s, treedef = _flatten_states(
             x_half, x_hat, s)
         spec = make_bucket_spec(leaves_hat, align=align,
                                 exact_small_leaves=exact_small_leaves,
                                 small_leaf_threshold=small_leaf_threshold,
                                 routes=leaf_routes)
-        payloads, q_leaves, new_hat = _packed_self_half(
-            compressor, key, leaves_h, leaves_hat, spec)
-
-        if axis_size == 1:
-            nbr_leaves = [q * 0.0 for q in q_leaves]
-        elif axis_size == 2:
-            got = jax.lax.ppermute(payloads, axis, fwd)
-            nbr_leaves = payloads_dense_leaves(spec, got)
-        else:
-            got_l = jax.lax.ppermute(payloads, axis, fwd)
-            got_r = jax.lax.ppermute(payloads, axis, bwd)
-            nbr_bufs = [bucket_dense(l, b) + bucket_dense(r, b)
-                        for l, r, b in zip(got_l, got_r, spec.buckets)]
-            nbr_leaves = unpack_leaves(spec, nbr_bufs)
-
-        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_leaves,
-                                           nbr_leaves, new_hat,
-                                           w_self, w_nbr, gamma)
+        flat_idx = _LazyFlatIndex(axes, sizes)
+        for t in range(gossip_steps):
+            sched, groups = compiled[t % len(compiled)]
+            tkey = key if t == 0 else jax.random.fold_in(key, t)
+            payloads, q_leaves, new_hat = _packed_self_half(
+                compressor, tkey, leaves_h, leaves_hat, spec)
+            if not groups:                     # n == 1: no neighbours
+                nbr_leaves, w_nbr = [q * 0.0 for q in q_leaves], 0.0
+            else:
+                dense_fn = lambda got: [bucket_dense(g, b) for g, b
+                                        in zip(got, spec.buckets)]
+                nbr_bufs, w_nbr = _neighbor_sum(payloads, groups, axis_arg,
+                                                dense_fn, flat_idx)
+                nbr_leaves = unpack_leaves(spec, nbr_bufs)
+            w_self = _self_weight(sched, flat_idx)
+            leaves_s, leaves_h = _choco_leaf_updates(
+                leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
+                w_self, w_nbr, gamma)
+            leaves_hat = new_hat
         unflatten = treedef.unflatten
-        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+        return unflatten(leaves_h), unflatten(leaves_hat), unflatten(leaves_s)
 
     if packed:
         return packed_local_fn
 
     def local_fn(key, x_half, x_hat, s):
         # distinct randomness per gossip node and per model/fsdp shard
-        key = jax.random.fold_in(key, jax.lax.axis_index(axis))
-        leaves_h, treedef = jax.tree_util.tree_flatten(x_half)
-        leaves_hat = treedef.flatten_up_to(x_hat)
-        leaves_s = treedef.flatten_up_to(s)
-        keys = _leaf_keys(key, len(leaves_h), 0)
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        leaves_h, leaves_hat, leaves_s, treedef = _flatten_states(
+            x_half, x_hat, s)
+        flat_idx = _LazyFlatIndex(axes, sizes)
+        for t in range(gossip_steps):
+            sched, groups = compiled[t % len(compiled)]
+            tkey = key if t == 0 else jax.random.fold_in(key, t)
+            keys = _leaf_keys(tkey, len(leaves_h), 0)
 
-        payloads, dense_fns, new_hat, q_dense = [], [], [], []
-        for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
-            # compress in the EF-state dtype: bf16 states -> bf16 wire values
-            delta = (lh.astype(lhat.dtype) - lhat).ravel()
-            comp_i = (identity if exact_small_leaves
-                      and delta.size <= small_leaf_threshold else compressor)
-            pl, dfn = _compress_leaf(
-                comp_i, keys[i] if comp_i.stochastic else None, delta)
-            payloads.append(pl)
-            dense_fns.append(dfn)
-            qd = dfn(pl)
-            q_dense.append(qd)
-            new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
+            payloads, dense_fns, new_hat, q_dense = [], [], [], []
+            for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
+                # compress in the EF-state dtype: bf16 states -> bf16 wire
+                delta = (lh.astype(lhat.dtype) - lhat).ravel()
+                comp_i = (identity if exact_small_leaves
+                          and delta.size <= small_leaf_threshold else compressor)
+                pl, dfn = _compress_leaf(
+                    comp_i, keys[i] if comp_i.stochastic else None, delta)
+                payloads.append(pl)
+                dense_fns.append(dfn)
+                qd = dfn(pl)
+                q_dense.append(qd)
+                new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
 
-        if axis_size == 1:
-            nbr_sum = [q * 0.0 for q in q_dense]
-        elif axis_size == 2:
-            got = jax.lax.ppermute(payloads, axis, fwd)
-            nbr_sum = [dfn(g) for dfn, g in zip(dense_fns, got)]
-        else:
-            got_l = jax.lax.ppermute(payloads, axis, fwd)
-            got_r = jax.lax.ppermute(payloads, axis, bwd)
-            nbr_sum = [dfn(l) + dfn(r)
-                       for dfn, l, r in zip(dense_fns, got_l, got_r)]
-
-        new_s, new_x = _choco_leaf_updates(leaves_h, leaves_s, q_dense,
-                                           nbr_sum, new_hat,
-                                           w_self, w_nbr, gamma)
+            if not groups:
+                nbr_sum, w_nbr = [q * 0.0 for q in q_dense], 0.0
+            else:
+                dense_fn = lambda got: [dfn(g) for dfn, g
+                                        in zip(dense_fns, got)]
+                nbr_sum, w_nbr = _neighbor_sum(payloads, groups, axis_arg,
+                                               dense_fn, flat_idx)
+            w_self = _self_weight(sched, flat_idx)
+            leaves_s, leaves_h = _choco_leaf_updates(
+                leaves_h, leaves_s, q_dense, nbr_sum, new_hat,
+                w_self, w_nbr, gamma)
+            leaves_hat = new_hat
         unflatten = treedef.unflatten
-        return unflatten(new_x), unflatten(new_hat), unflatten(new_s)
+        return unflatten(leaves_h), unflatten(leaves_hat), unflatten(leaves_s)
 
     return local_fn
 
 
-def make_plain_gossip_fn(*, axis: str, axis_size: int) -> Callable:
-    """Exact neighbour averaging (Algorithm 3): x = sum_j w_ij x_j."""
-    w_self, w_nbr = ring_weights(axis_size)
-    fwd = ring_perm(axis_size, 1)
-    bwd = ring_perm(axis_size, -1)
+# ---------------------------------------------------------------------------
+# exact baselines
+# ---------------------------------------------------------------------------
+
+def make_plain_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                           schedules: Tuple[GossipSchedule, ...],
+                           gossip_steps: int = 1) -> Callable:
+    """Exact neighbour averaging (Algorithm 3): x = sum_j w_ij x_j, on any
+    compiled schedule (the uncompressed iterates themselves are the wire
+    payload)."""
+    compiled = [(sch, _weight_groups(sch)) for sch in schedules]
+    axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
 
     def local_fn(key, x_half, x_hat, s):
         del key
-        if axis_size == 1:
-            return x_half, x_hat, s
-        if axis_size == 2:
-            other = jax.lax.ppermute(x_half, axis, fwd)
-            new_x = jax.tree.map(lambda a, b: w_self * a + w_nbr * b, x_half, other)
-        else:
-            left = jax.lax.ppermute(x_half, axis, fwd)
-            right = jax.lax.ppermute(x_half, axis, bwd)
-            new_x = jax.tree.map(lambda a, b, c: w_self * a + w_nbr * (b + c),
-                                 x_half, left, right)
-        return new_x, x_hat, s
+        x = x_half
+        flat_idx = _LazyFlatIndex(axes, sizes)
+        for t in range(gossip_steps):
+            sched, groups = compiled[t % len(compiled)]
+            if not groups:
+                continue
+            leaves, treedef = jax.tree_util.tree_flatten(x)
+            nbr, w_nbr = _neighbor_sum(leaves, groups, axis_arg,
+                                       lambda got: got, flat_idx)
+            w_self = _self_weight(sched, flat_idx)
+            # cast back: per-node weights are f32 scalars and would upcast
+            # bf16 params (uniform python-float weights make this a no-op)
+            x = treedef.unflatten([(w_self * a + w_nbr * b).astype(a.dtype)
+                                   for a, b in zip(leaves, nbr)])
+        return x, x_hat, s
 
     return local_fn
 
 
-def make_allreduce_fn(*, axis: str, axis_size: int) -> Callable:
-    """Centralized baseline: exact average over the gossip axis (all-reduce)."""
+def make_allreduce_fn(*, axes) -> Callable:
+    """Centralized baseline: exact average over the gossip axes (all-reduce)."""
+    axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
+
     def local_fn(key, x_half, x_hat, s):
         del key
-        new_x = jax.tree.map(lambda a: jax.lax.pmean(a, axis), x_half)
+        new_x = jax.tree.map(lambda a: jax.lax.pmean(a, axis_arg), x_half)
         return new_x, x_hat, s
     return local_fn
 
 
-def make_gossip_exchange(*, mode: str, mesh, state_specs, axis: str,
+# ---------------------------------------------------------------------------
+# exchange builder
+# ---------------------------------------------------------------------------
+
+def _default_schedules(axes, sizes) -> Tuple[GossipSchedule, ...]:
+    """Back-compat default: a uniform ring on one gossip axis, the 2-d torus
+    over a (pod, data) axis pair — the two pre-schedule engine graphs."""
+    from repro.comm.schedule import compile_schedule
+    from repro.core.topology import ring, torus2d
+    if len(axes) == 1:
+        return (compile_schedule(ring(sizes[0])),)
+    assert len(axes) == 2, "gossip over more than 2 mesh axes needs explicit schedules"
+    return (compile_schedule(torus2d(*sizes), grid=tuple(sizes)),)
+
+
+def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
                          compressor: Optional[Compressor] = None,
                          gamma: float = 1.0, exact_small_leaves: bool = False,
                          small_leaf_threshold: int = 8_192,
                          packed: bool = True,
-                         pack_align: Optional[int] = None) -> Callable:
+                         pack_align: Optional[int] = None,
+                         schedules: Optional[Sequence[GossipSchedule]] = None,
+                         gossip_steps: int = 1) -> Callable:
     """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
 
+    axis: one mesh axis name, or a tuple of axis names whose row-major
+    flattening carries the schedule's node ids (the trainer maps the torus
+    onto the (pod, data) ICI grid this way).
     state_specs: pytree of PartitionSpec matching the param pytree (with the
-    leading node dim mapped to `axis`).  packed selects the bucketed
-    flat-buffer engine (default) vs the legacy per-leaf exchange.
+    leading node dim mapped to the gossip axes).
+    schedules: compiled GossipSchedule sequence (time-varying mixing cycles
+    through it across gossip_steps); None = a ring on a single axis / the
+    2-d torus on an axis pair, matching the pre-schedule engines.
+    packed selects the bucketed flat-buffer engine (default) vs the legacy
+    per-leaf exchange.
     """
-    if isinstance(axis, (tuple, list)):        # 2-D torus gossip
-        sizes = tuple(mesh.shape[a] for a in axis)
-        if mode != "choco":
-            raise NotImplementedError("torus gossip implemented for choco mode")
-        local_fn = make_choco_gossip_2d_fn(
-            axes=tuple(axis), sizes=sizes, compressor=compressor, gamma=gamma,
+    axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    schedules = (tuple(schedules) if schedules
+                 else _default_schedules(axes, sizes))
+    if len(schedules) > 1 and gossip_steps % len(schedules) != 0:
+        # the t-loop restarts at 0 every exchange, so a sequence longer than
+        # gossip_steps would silently never run its tail schedules (while
+        # gamma is still computed conservatively over the whole sequence)
+        raise ValueError(
+            f"time-varying mixing with {len(schedules)} schedules needs "
+            f"gossip_steps to be a multiple of the sequence length so every "
+            f"schedule runs each SGD step; got gossip_steps={gossip_steps}")
+
+    if mode == "choco":
+        local_fn = make_choco_schedule_fn(
+            axes=axes, sizes=sizes, schedules=schedules,
+            compressor=compressor, gamma=gamma, gossip_steps=gossip_steps,
             exact_small_leaves=exact_small_leaves,
             small_leaf_threshold=small_leaf_threshold,
             packed=packed, pack_align=pack_align,
-            leaf_routes=_leaf_routes(state_specs, axis))
-        return shard_map(
-            local_fn, mesh=mesh,
-            in_specs=(P(), state_specs, state_specs, state_specs),
-            out_specs=(state_specs, state_specs, state_specs),
-        )
-    axis_size = mesh.shape[axis]
-    if mode == "choco":
-        local_fn = make_choco_gossip_fn(axis=axis, axis_size=axis_size,
-                                        compressor=compressor, gamma=gamma,
-                                        exact_small_leaves=exact_small_leaves,
-                                        small_leaf_threshold=small_leaf_threshold,
-                                        packed=packed, pack_align=pack_align,
-                                        leaf_routes=_leaf_routes(state_specs, axis))
+            leaf_routes=_leaf_routes(state_specs, axes))
     elif mode == "plain":
-        local_fn = make_plain_gossip_fn(axis=axis, axis_size=axis_size)
+        local_fn = make_plain_schedule_fn(axes=axes, sizes=sizes,
+                                          schedules=schedules,
+                                          gossip_steps=gossip_steps)
     elif mode == "allreduce":
-        local_fn = make_allreduce_fn(axis=axis, axis_size=axis_size)
+        local_fn = make_allreduce_fn(axes=axes)
     else:
         raise ValueError(mode)
 

@@ -329,6 +329,26 @@ def payloads_dense_leaves(spec: BucketSpec, payloads) -> List[jax.Array]:
         spec, [bucket_dense(p, b) for p, b in zip(payloads, spec.buckets)])
 
 
+def bucket_omega_worst(spec: BucketSpec, compressor: Compressor) -> float:
+    """Worst-case (smallest) Assumption-1 omega over the spec's compressed
+    buckets.  The packed engine compresses per bucket, so the Lyapunov
+    contraction of Theorem 2 is governed by the slowest-contracting bucket —
+    this is the omega the consensus stepsize gamma* should be computed from
+    (not a fixed representative dimension).  Exact buckets ship uncompressed
+    (omega = 1) and never bind.  Sparse coordinate budgets resolve per slot,
+    exactly as compress_bucket does."""
+    omegas = []
+    for b in spec.buckets:
+        if b.exact or isinstance(compressor, Identity):
+            continue
+        if isinstance(compressor, (TopK, RandK)):
+            k = _slot_budget(compressor, spec.bucket_slots(b.index), b)
+            omegas.append(k / b.logical)
+        else:
+            omegas.append(compressor.omega(b.logical))
+    return min(omegas) if omegas else 1.0
+
+
 def packed_wire_bits(spec: BucketSpec, compressor: Compressor) -> int:
     """Analytic bits-on-the-wire of one packed exchange (all buckets)."""
     total = 0

@@ -1,0 +1,271 @@
+"""Topology-compiled gossip schedules.
+
+The paper's rate depends only on the spectral gap of the mixing matrix W
+(Definition 1, Table 1), but a distributed runtime needs W expressed as data
+movement: which node sends to which, in how many synchronous rounds, with
+what receive weight.  This module is that compiler.  It turns any
+``core.topology.Topology`` into a static :class:`GossipSchedule` — a
+decomposition
+
+    W = diag(self_weights) + sum_r  weight_r * P_r
+
+where every ``P_r`` is a (partial) permutation matrix, i.e. one
+``jax.lax.ppermute`` in the distributed engine (``comm/gossip.py``).  Nodes
+absent from a round's permutation receive zeros, which the uniform receive
+weight annihilates, so partial rounds stay correct.
+
+Decompositions, by graph family:
+  * ring            — 2 shift rounds (+1 / -1); 1 for n == 2
+  * torus2d         — 2 shift rounds per grid axis (the old hardcoded
+                      pod x data engine, now one compiled schedule)
+  * hypercube       — log2(n) dimension-exchange rounds (i <-> i ^ 2^b)
+  * fully_connected — n - 1 shift rounds, weight 1/n each
+  * anything else   — greedy edge coloring of the support of W: each color
+                      class is a matching, shipped as one symmetric-swap
+                      permutation round (greedy bound: at most
+                      2 * max_degree - 1 rounds; exact for the paper's star
+                      and chain)
+
+Everything here is **pure Python + numpy**: compilation reads only static
+``Topology`` metadata, never traces jax, and is deterministic — the round
+count and permutations depend only on (W, grid).  The schedule is therefore
+computed once at trainer-build time and baked into the jitted step as
+constants (see ``tests/test_schedule.py::test_schedule_compiler_is_trace_free``).
+
+Time-varying mixing (Koloskova et al. 2020; Toghani & Uribe 2022) is a
+sequence of schedules: :func:`compile_schedules` compiles one per topology
+and the engine cycles through them across the ``gossip_steps`` consensus
+rounds of each SGD step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.topology import Topology, _square_factors
+
+#: entries of W below this are treated as structural zeros (no edge)
+_EDGE_TOL = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipRound:
+    """One synchronous exchange: a ppermute plus per-destination weights.
+
+    ``perm`` is the (src, dst) pair list handed to ``jax.lax.ppermute``
+    (flat row-major node ids over the gossip mesh axes).  ``weight`` is the
+    uniform receive weight when every destination applies the same one;
+    otherwise ``weights[i]`` is node i's receive weight (0 for nodes that
+    receive nothing — ppermute hands them zeros anyway)."""
+    perm: Tuple[Tuple[int, int], ...]
+    weight: Optional[float] = None
+    weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        assert (self.weight is None) != (self.weights is None)
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipSchedule:
+    """Static decomposition of one mixing matrix into permutation rounds."""
+    name: str
+    n: int
+    rounds: Tuple[GossipRound, ...]
+    self_weights: Tuple[float, ...]          # diag(W), per node
+    self_weight: Optional[float] = None      # uniform diag(W), when it is
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def mixing_matrix(self) -> np.ndarray:
+        """Reconstruct W from the rounds (used to validate compilation)."""
+        W = np.diag(np.asarray(self.self_weights, dtype=np.float64))
+        for rnd in self.rounds:
+            for src, dst in rnd.perm:
+                w = rnd.weight if rnd.weight is not None else rnd.weights[dst]
+                W[dst, src] += w
+        return W
+
+
+def _uniform(values) -> Optional[float]:
+    vals = list(values)
+    if not vals:
+        return None
+    first = float(vals[0])
+    return first if all(float(v) == first for v in vals) else None
+
+
+def _make_round(perm, weights_by_dst, n: int) -> GossipRound:
+    """Round from explicit per-destination weights; collapses to a uniform
+    scalar when every destination weight is identical."""
+    w = _uniform(weights_by_dst.values())
+    if w is not None:
+        return GossipRound(perm=tuple(perm), weight=w)
+    vec = [0.0] * n
+    for dst, wd in weights_by_dst.items():
+        vec[dst] = float(wd)
+    return GossipRound(perm=tuple(perm), weights=tuple(vec))
+
+
+# ---------------------------------------------------------------------------
+# structured decompositions
+# ---------------------------------------------------------------------------
+
+def _ring_rounds(W: np.ndarray) -> list:
+    n = W.shape[0]
+    if n < 2:
+        return []
+    fwd = tuple((i, (i + 1) % n) for i in range(n))
+    rounds = [_make_round(fwd, {(i + 1) % n: W[(i + 1) % n, i]
+                                for i in range(n)}, n)]
+    if n > 2:
+        bwd = tuple((i, (i - 1) % n) for i in range(n))
+        rounds.append(_make_round(bwd, {(i - 1) % n: W[(i - 1) % n, i]
+                                        for i in range(n)}, n))
+    return rounds
+
+
+def _torus_rounds(W: np.ndarray, grid: Tuple[int, int]) -> list:
+    """Two shift rounds per grid axis, in the axis order of ``grid`` —
+    exactly the data movement of the old hardcoded pod x data engine."""
+    rows, cols = grid
+    nid = lambda r, c: (r % rows) * cols + (c % cols)
+    rounds = []
+    for axis_size, step in ((rows, lambda r, c, d: nid(r + d, c)),
+                            (cols, lambda r, c, d: nid(r, c + d))):
+        if axis_size < 2:
+            continue
+        for d in (1, -1):
+            if axis_size == 2 and d == -1:
+                continue          # both directions are the same single edge
+            perm = tuple((nid(r, c), step(r, c, d))
+                         for r in range(rows) for c in range(cols))
+            rounds.append(_make_round(
+                perm, {dst: W[dst, src] for src, dst in perm}, rows * cols))
+    return rounds
+
+
+def _hypercube_rounds(W: np.ndarray) -> list:
+    n = W.shape[0]
+    m = int(np.log2(n))
+    rounds = []
+    for b in range(m):
+        perm = tuple((i, i ^ (1 << b)) for i in range(n))
+        rounds.append(_make_round(perm, {dst: W[dst, src]
+                                         for src, dst in perm}, n))
+    return rounds
+
+
+def _fully_connected_rounds(W: np.ndarray) -> list:
+    n = W.shape[0]
+    rounds = []
+    for s in range(1, n):
+        perm = tuple((i, (i + s) % n) for i in range(n))
+        rounds.append(_make_round(perm, {(i + s) % n: W[(i + s) % n, i]
+                                         for i in range(n)}, n))
+    return rounds
+
+
+# ---------------------------------------------------------------------------
+# general graphs: greedy edge coloring
+# ---------------------------------------------------------------------------
+
+def _edge_coloring_rounds(W: np.ndarray) -> list:
+    """Proper greedy edge coloring of the support of W.  Every color class
+    is a matching; a matching ships as one symmetric-swap permutation (each
+    matched node sends to and receives from its partner).  Greedy needs at
+    most 2 * max_degree - 1 colors; for the paper's graphs it is exact
+    (star: n-1, chain: 2)."""
+    n = W.shape[0]
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if abs(W[i, j]) > _EDGE_TOL]
+    colors: list = []                       # color -> list of (i, j)
+    used = [set() for _ in range(n)]        # node -> colors already incident
+    for i, j in edges:
+        c = 0
+        while c in used[i] or c in used[j]:
+            c += 1
+        while len(colors) <= c:
+            colors.append([])
+        colors[c].append((i, j))
+        used[i].add(c)
+        used[j].add(c)
+    rounds = []
+    for matching in colors:
+        perm, weights = [], {}
+        for i, j in matching:
+            perm += [(i, j), (j, i)]
+            weights[j] = W[j, i]
+            weights[i] = W[i, j]
+        rounds.append(_make_round(tuple(perm), weights, n))
+    return rounds
+
+
+# ---------------------------------------------------------------------------
+# compiler
+# ---------------------------------------------------------------------------
+
+def compile_schedule(topo: Topology,
+                     grid: Optional[Tuple[int, int]] = None) -> GossipSchedule:
+    """Compile one Topology into permutation rounds.
+
+    grid: (rows, cols) mapping of node ids onto a 2-d grid — required when a
+    ``torus2d`` topology should decompose into axis shifts and the
+    factorization differs from ``_square_factors(n)`` (the trainer passes
+    the (pod, data) mesh extents).  Every structured decomposition is
+    validated against W; on mismatch (e.g. a hand-built W reusing a family
+    name) compilation falls back to greedy edge coloring, which is exact by
+    construction.
+    """
+    W = np.asarray(topo.W, dtype=np.float64)
+    n = W.shape[0]
+    if not np.allclose(W, W.T, atol=1e-10):
+        raise ValueError("schedule compiler requires a symmetric W")
+
+    builders = {
+        "ring": lambda: _ring_rounds(W),
+        "torus2d": lambda: _torus_rounds(W, grid or _square_factors(n)),
+        "hypercube": lambda: _hypercube_rounds(W),
+        "fully_connected": lambda: _fully_connected_rounds(W),
+    }
+    builder = builders.get(topo.name)
+    candidates = [builder] if builder is not None else []
+    candidates.append(lambda: _edge_coloring_rounds(W))
+
+    diag = tuple(float(W[i, i]) for i in range(n))
+    last_err = None
+    for build in candidates:
+        try:
+            rounds = build()
+        except (IndexError, ValueError):
+            # a hand-built W reusing a family name can break the structured
+            # builder's index arithmetic (e.g. "hypercube" with n != 2^m);
+            # the edge-coloring fallback is always well-defined
+            continue
+        sched = GossipSchedule(name=topo.name, n=n, rounds=tuple(rounds),
+                               self_weights=diag, self_weight=_uniform(diag))
+        err = float(np.max(np.abs(sched.mixing_matrix() - W))) if n else 0.0
+        if err <= 1e-9:
+            return sched
+        last_err = err
+    raise AssertionError(
+        f"schedule compilation failed for {topo.name!r} (n={n}): "
+        f"reconstruction error {last_err}")
+
+
+def compile_schedules(topos: Sequence[Topology],
+                      grid: Optional[Tuple[int, int]] = None
+                      ) -> Tuple[GossipSchedule, ...]:
+    """Compile a (time-varying) sequence of topologies over the same node
+    set; the gossip engine cycles through them round-robin across the
+    ``gossip_steps`` consensus rounds of each SGD step."""
+    scheds = tuple(compile_schedule(t, grid=grid) for t in topos)
+    if not scheds:
+        raise ValueError("need at least one topology")
+    if len({s.n for s in scheds}) != 1:
+        raise ValueError(f"time-varying schedules must share n, "
+                         f"got {[s.n for s in scheds]}")
+    return scheds

@@ -175,13 +175,31 @@ def get_config(arch: str, smoke: bool = False) -> ModelConfig:
     return mod.SMOKE_CONFIG if smoke else mod.CONFIG
 
 
+def parse_topology(spec: str) -> Tuple[str, ...]:
+    """Comma-separated topology spec -> name tuple ("ring,hypercube" ->
+    ("ring", "hypercube")).  The single parser for both the CLI validation
+    (launch/train.py, pre-jax) and the trainer — this module is jax-free, so
+    the two can never drift."""
+    return tuple(t.strip() for t in spec.split(",") if t.strip())
+
+
 @dataclasses.dataclass(frozen=True)
 class ChocoConfig:
     """Paper-technique settings for decentralized training."""
     compressor: str = "top_k"       # compression.make_compressor name
     comp_kwargs: tuple = (("fraction", 0.01),)
-    gossip_axis: str = "data"       # mesh axis carrying the gossip ring
+    gossip_axis: str = "data"       # mesh axis carrying the gossip graph
+    # gossip graph name (core.topology registry: ring | torus | hypercube |
+    # star | chain | fully_connected), or a comma-separated sequence
+    # ("ring,hypercube") for time-varying mixing — the schedule compiler
+    # (comm/schedule.py) compiles one schedule per name and the engine
+    # cycles through them across the gossip_steps rounds of each SGD step
     topology: str = "ring"
+    # CHOCO gossip rounds per SGD step (Hashemi et al. 2020: multiple gossip
+    # steps per update dramatically improve communication-constrained
+    # convergence); the packed engine builds the bucket spec once per step,
+    # so k rounds amortize k compressions into one pack
+    gossip_steps: int = 1
     consensus_gamma: Optional[float] = None   # None = Theorem-2 stepsize
     # which leaves gossip exactly (uncompressed): tiny leaves where compression
     # overhead > saving (beyond-paper optimisation, off for paper-faithful runs)

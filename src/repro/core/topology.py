@@ -113,7 +113,10 @@ def star(n: int) -> Topology:
 
 def hypercube(n: int) -> Topology:
     m = int(np.log2(n))
-    assert 2 ** m == n, "hypercube needs n = 2^m"
+    if 2 ** m != n:
+        raise ValueError(f"hypercube topology needs n = 2^m nodes, got n={n}; "
+                         f"use n={2 ** m} or n={2 ** (m + 1)}, or another "
+                         f"topology")
     adj = np.zeros((n, n), dtype=int)
     for i in range(n):
         for b in range(m):
@@ -123,7 +126,7 @@ def hypercube(n: int) -> Topology:
 
 _TOPOLOGIES = {
     "ring": lambda n: ring(n),
-    "torus": lambda n: torus2d(*_square_factors(n)),
+    "torus": lambda n: torus2d(*_torus_factors(n)),
     "fully_connected": lambda n: fully_connected(n),
     "chain": lambda n: chain(n),
     "star": lambda n: star(n),
@@ -136,6 +139,23 @@ def _square_factors(n: int) -> Tuple[int, int]:
     while n % r:
         r -= 1
     return r, n // r
+
+
+def _torus_factors(n: int) -> Tuple[int, int]:
+    """Most-square rows x cols factorization, refusing the degenerate 1 x n
+    strip: a "torus" on prime n is a ring with doubled edges, whose spectral
+    gap is the ring's O(1/n^2), not the advertised O(1/n) (Table 1) — the
+    Theorem-2 stepsize computed from the claimed family would be silently
+    wrong.  Fail fast instead."""
+    rows, cols = _square_factors(n)
+    if rows == 1 and n > 1:
+        raise ValueError(
+            f"torus topology needs a non-trivial rows x cols factorization, "
+            f"but n={n} only factors as 1x{n} — a degenerate strip with "
+            f"ring-grade spectral gap O(1/n^2), not the torus O(1/n). "
+            f"Use a composite node count (e.g. n={n - 1} or n={n + 1}) or "
+            f"topology='ring'.")
+    return rows, cols
 
 
 def make_topology(name: str, n: int) -> Topology:

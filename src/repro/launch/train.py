@@ -13,6 +13,13 @@ import os
 import sys
 import time
 
+from repro.configs.base import parse_topology  # jax-free: safe pre-XLA_FLAGS
+
+# mirrors core.topology._TOPOLOGIES; kept literal so arg validation never
+# imports jax before XLA_FLAGS is set
+TOPOLOGY_CHOICES = ("ring", "torus", "hypercube", "star", "chain",
+                    "fully_connected")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -24,9 +31,21 @@ def main(argv=None):
     ap.add_argument("--batch-per-node", type=int, default=None)
     ap.add_argument("--mode", default="choco",
                     choices=["choco", "plain", "allreduce"])
+    ap.add_argument("--topology", default="ring",
+                    help="gossip graph (one of "
+                         f"{'/'.join(TOPOLOGY_CHOICES)}), or a "
+                         "comma-separated sequence for time-varying mixing, "
+                         "cycled across the --gossip-steps rounds of each "
+                         "SGD step")
+    ap.add_argument("--gossip-steps", type=int, default=1,
+                    help="CHOCO gossip rounds per SGD step (k>1 trades wire "
+                         "bytes for consensus; one pack amortizes the k "
+                         "compressions)")
     ap.add_argument("--compressor", default="top_k")
-    ap.add_argument("--fraction", type=float, default=0.01)
-    ap.add_argument("--qsgd-s", type=int, default=None)
+    ap.add_argument("--fraction", type=float, default=0.01,
+                    help="coordinate fraction for top_k/rand_k/block_top_k")
+    ap.add_argument("--qsgd-s", type=int, default=None,
+                    help="quantization levels (required with --compressor qsgd)")
     ap.add_argument("--state-dtype", default="float32")
     ap.add_argument("--gossip-engine", default="packed",
                     choices=["packed", "per-leaf"],
@@ -46,6 +65,23 @@ def main(argv=None):
     ap.add_argument("--mesh", default=None,
                     help="e.g. 4x2 => (data=4, model=2); default: production")
     args = ap.parse_args(argv)
+
+    # fail fast on bad combinations, before any jax/device work
+    topo_names = parse_topology(args.topology)
+    bad = [t for t in topo_names if t not in TOPOLOGY_CHOICES]
+    if bad or not topo_names:
+        ap.error(f"--topology {args.topology!r}: unknown graph(s) {bad}; "
+                 f"choose from {', '.join(TOPOLOGY_CHOICES)}")
+    if args.gossip_steps < 1:
+        ap.error("--gossip-steps must be >= 1")
+    if len(topo_names) > 1 and args.gossip_steps % len(topo_names) != 0:
+        ap.error(f"--topology {args.topology!r} is a {len(topo_names)}-graph "
+                 f"time-varying sequence: --gossip-steps must be a multiple "
+                 f"of {len(topo_names)} so every graph runs each SGD step "
+                 f"(got {args.gossip_steps})")
+    if args.compressor == "qsgd" and args.qsgd_s is None:
+        ap.error("--compressor qsgd requires --qsgd-s (quantization levels); "
+                 "it takes no --fraction")
 
     if args.simulate_devices:
         os.environ["XLA_FLAGS"] = (
@@ -75,13 +111,21 @@ def main(argv=None):
     model = build_model(cfg)
     print(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"nodes={n_nodes} mode={args.mode}")
+          f"nodes={n_nodes} mode={args.mode} topology={args.topology} "
+          f"gossip_steps={args.gossip_steps}")
 
-    comp_kwargs = (("s", args.qsgd_s),) if args.qsgd_s else (("fraction", args.fraction),)
+    if args.compressor == "qsgd":
+        comp_kwargs = (("s", args.qsgd_s),)
+    elif args.compressor in ("sign", "identity"):
+        comp_kwargs = ()
+    else:
+        comp_kwargs = (("fraction", args.fraction),)
     trainer = DecentralizedTrainer(
         model=model,
         choco=ChocoConfig(compressor=args.compressor, comp_kwargs=comp_kwargs,
                           gossip_axis=gossip_axis, state_dtype=args.state_dtype,
+                          topology=args.topology,
+                          gossip_steps=args.gossip_steps,
                           packed_gossip=(args.gossip_engine == "packed"),
                           exact_small_leaves=args.exact_small_leaves),
         mesh=mesh, n_nodes=n_nodes,

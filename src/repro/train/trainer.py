@@ -17,11 +17,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ChocoConfig
+from repro.configs.base import ModelConfig, ChocoConfig, parse_topology
 from repro.core.compression import make_compressor
 from repro.core.choco_gossip import theorem2_stepsize
-from repro.core.topology import ring, torus2d
+from repro.core.topology import make_topology, torus2d
 from repro.comm.gossip import make_gossip_exchange
+from repro.comm.schedule import compile_schedules
 from repro.models.transformer import Model
 from repro.optim.sgd import Optimizer, OptState
 from repro.launch.sharding import param_pspecs, batch_pspecs
@@ -51,31 +52,91 @@ class DecentralizedTrainer:
         self.compressor = (make_compressor(self.choco.compressor, **self.choco.comp_dict())
                            if self.mode == "choco" else None)
         axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
-        # torus topology: gossip over the (pod, data) grid — paper Table 1
-        # delta = O(1/n) instead of the ring's O(1/n^2)
-        self.torus = (self.choco.topology == "torus"
-                      and "pod" in self.mesh.axis_names)
+        names = parse_topology(self.choco.topology)
+        # torus on a multi-pod mesh maps onto the (pod, data) ICI grid —
+        # paper Table 1 delta = O(1/n) instead of the ring's O(1/n^2); every
+        # other topology (and single-pod torus) lives on one gossip axis
+        # whose flat index carries the schedule's node ids.  A time-varying
+        # sequence containing a torus lifts the WHOLE sequence onto the
+        # (pod, data) pair (schedules address flat row-major ids, so any
+        # graph runs on the axis tuple) — comma order never changes the
+        # node set.
+        self.torus = ("torus" in names and "pod" in self.mesh.axis_names)
         if self.torus:
             self.gossip_axis = ("pod", "data")
             n = axes["pod"] * axes["data"]
             self.fsdp_axis = None
-            topo = torus2d(axes["pod"], axes["data"])
+            grid = (axes["pod"], axes["data"])
         else:
             self.gossip_axis = self.choco.gossip_axis
             n = axes[self.gossip_axis]
             self.fsdp_axis = "data" if self.gossip_axis == "pod" else None
-            topo = ring(n)
+            grid = None
         assert n == self.n_nodes, \
             f"gossip over {self.gossip_axis} = {n} nodes != n_nodes {self.n_nodes}"
-        # Theorem-2 consensus stepsize from the topology and compression
+        # compile the (possibly time-varying) topology sequence into static
+        # permutation-round schedules — the engine replays them with one
+        # lax.ppermute per round
+        self.topologies = tuple(
+            torus2d(*grid) if (name == "torus" and grid is not None)
+            else make_topology(name, n) for name in names)
+        self.schedules = compile_schedules(self.topologies, grid=grid)
+        if (len(self.schedules) > 1
+                and self.choco.gossip_steps % len(self.schedules) != 0):
+            raise ValueError(
+                f"topology={self.choco.topology!r} is a time-varying "
+                f"sequence of {len(self.schedules)} graphs: gossip_steps "
+                f"must be a multiple of the sequence length so every graph "
+                f"runs each SGD step (got {self.choco.gossip_steps})")
+        # Theorem-2 consensus stepsize from the topology and compression;
+        # a time-varying sequence takes the conservative worst case
         if self.choco.consensus_gamma is not None:
             self.gamma = self.choco.consensus_gamma
         elif self.mode == "choco":
-            # omega depends on leaf size; use a representative 1M-coordinate value
-            omega = self.compressor.omega(1 << 20)
-            self.gamma = theorem2_stepsize(topo.delta, topo.beta, omega)
+            delta = min(t.delta for t in self.topologies)
+            beta = max(t.beta for t in self.topologies)
+            self.gamma = theorem2_stepsize(delta, beta, self._worst_omega())
         else:
             self.gamma = 1.0
+
+    def _worst_omega(self) -> float:
+        """Assumption-1 omega for the stepsize: computed from the ACTUAL
+        packed bucket sizes (the packed engine compresses per bucket, so the
+        contraction is governed by the worst bucket), not a fixed
+        representative dimension.  Legacy per-leaf engine keeps the old
+        1M-coordinate representative value."""
+        if not self.choco.packed_gossip:
+            return self.compressor.omega(1 << 20)
+        from repro.comm.gossip import _leaf_routes, _pack_align
+        from repro.comm.packing import bucket_omega_worst, make_bucket_spec
+        shape = self.state_shape()
+        specs = param_pspecs(shape.params, self.model.cfg,
+                             node_axis=self.gossip_axis,
+                             fsdp_axis=self.fsdp_axis, model_size=0)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        local = [jax.ShapeDtypeStruct(self._local_shape(l.shape, sp), l.dtype)
+                 for l, sp in zip(jax.tree.leaves(shape.x_hat), spec_leaves)]
+        spec = make_bucket_spec(
+            local, align=_pack_align(self.compressor, self.choco.pack_align),
+            exact_small_leaves=self.choco.exact_small_leaves,
+            small_leaf_threshold=self.choco.small_leaf_threshold,
+            routes=_leaf_routes(specs, self.gossip_axis))
+        return bucket_omega_worst(spec, self.compressor)
+
+    def _local_shape(self, shape, sp) -> Tuple[int, ...]:
+        """Per-shard leaf shape under a PartitionSpec — what the exchange's
+        bucket spec actually sees inside shard_map."""
+        dims = list(shape)
+        if isinstance(sp, P):
+            for i, entry in enumerate(sp):
+                if entry is None:
+                    continue
+                f = 1
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    f *= self.mesh.shape[a]
+                dims[i] = max(1, dims[i] // f)
+        return tuple(dims)
 
     # -- state ----------------------------------------------------------------
 
@@ -162,7 +223,9 @@ class DecentralizedTrainer:
             exact_small_leaves=self.choco.exact_small_leaves,
             small_leaf_threshold=self.choco.small_leaf_threshold,
             packed=self.choco.packed_gossip,
-            pack_align=self.choco.pack_align)
+            pack_align=self.choco.pack_align,
+            schedules=self.schedules,
+            gossip_steps=self.choco.gossip_steps)
 
     # -- jit with shardings -----------------------------------------------------
 

@@ -1,0 +1,162 @@
+"""Schedule compiler unit tests (fast tier): the permutation-round
+decomposition must reconstruct W exactly for every topology family, stay
+pure trace-free Python (no jax), and compile deterministically — schedule
+compilation runs at trainer-build time and must never regress jit compile
+times (it is baked into the step as constants)."""
+import ast
+import inspect
+
+import numpy as np
+import pytest
+
+import repro.comm.schedule as schedule_mod
+from repro.comm.schedule import compile_schedule, compile_schedules
+from repro.core.topology import (Topology, _from_adjacency, chain,
+                                 fully_connected, hypercube, ring, star,
+                                 torus2d)
+
+ALL_TOPOLOGIES = [
+    ("ring", lambda: ring(8)),
+    ("ring2", lambda: ring(2)),
+    ("ring25", lambda: ring(25)),
+    ("torus", lambda: torus2d(2, 4)),
+    ("torus44", lambda: torus2d(4, 4)),
+    ("torus35", lambda: torus2d(3, 5)),
+    ("hypercube", lambda: hypercube(8)),
+    ("hypercube16", lambda: hypercube(16)),
+    ("star", lambda: star(8)),
+    ("chain", lambda: chain(8)),
+    ("fully_connected", lambda: fully_connected(8)),
+]
+
+
+@pytest.mark.parametrize("name,topo_fn", ALL_TOPOLOGIES)
+def test_schedule_reconstructs_W_exactly(name, topo_fn):
+    """W = diag(self_weights) + sum_r weight_r * P_r, element-exact."""
+    topo = topo_fn()
+    sched = compile_schedule(topo)
+    np.testing.assert_allclose(sched.mixing_matrix(), topo.W,
+                               rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("name,topo_fn", ALL_TOPOLOGIES)
+def test_rounds_are_valid_partial_permutations(name, topo_fn):
+    """Every round must be ppermute-able: each node is the source of at most
+    one pair and the destination of at most one pair."""
+    sched = compile_schedule(topo_fn())
+    for rnd in sched.rounds:
+        srcs = [s for s, _ in rnd.perm]
+        dsts = [d for _, d in rnd.perm]
+        assert len(set(srcs)) == len(srcs), rnd.perm
+        assert len(set(dsts)) == len(dsts), rnd.perm
+        assert all(0 <= i < sched.n for i in srcs + dsts)
+
+
+def test_round_counts_are_optimal_and_deterministic():
+    """Round count = number of collective-permute rounds per gossip step;
+    these are the launch-count contracts EXPERIMENTS.md §Perf E records."""
+    expected = {
+        "ring": (ring(8), 2),               # +1 / -1 shifts
+        "ring2": (ring(2), 1),              # single edge
+        "ring1": (ring(1), 0),              # trivial
+        "torus2x4": (torus2d(2, 4), 3),     # 1 (rows=2) + 2 (cols=4)
+        "torus4x4": (torus2d(4, 4), 4),     # 2 per axis
+        "hypercube8": (hypercube(8), 3),    # log2(8) dimension exchanges
+        "hypercube16": (hypercube(16), 4),
+        "fc8": (fully_connected(8), 7),     # n - 1 shifts
+        "star8": (star(8), 7),              # hub is in every matching
+        "chain8": (chain(8), 2),            # alternating matchings
+    }
+    for label, (topo, n_rounds) in expected.items():
+        a = compile_schedule(topo)
+        b = compile_schedule(topo)
+        assert a.n_rounds == n_rounds, (label, a.n_rounds)
+        assert a == b, f"{label}: compilation is not deterministic"
+
+
+def test_schedule_compiler_is_trace_free():
+    """The compiler must stay pure Python: no jax import anywhere in the
+    module (so it can never trace or add compile time), and everything in a
+    compiled schedule is a plain python int/float/tuple, never an array."""
+    tree = ast.parse(inspect.getsource(schedule_mod))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            names = [node.module or ""]
+        else:
+            continue
+        for mod in names:
+            assert not mod.split(".")[0] == "jax", \
+                f"schedule compiler imports jax via {mod!r}"
+
+    sched = compile_schedule(star(8))     # exercises per-node weights too
+    assert isinstance(sched.n, int)
+    assert all(isinstance(w, float) for w in sched.self_weights)
+    for rnd in sched.rounds:
+        assert all(isinstance(i, int) for p in rnd.perm for i in p)
+        assert rnd.weight is None or isinstance(rnd.weight, float)
+        assert rnd.weights is None or all(
+            isinstance(w, float) for w in rnd.weights)
+
+
+def test_general_graph_via_edge_coloring():
+    """An arbitrary symmetric Metropolis-Hastings W (no family fast path)
+    compiles through greedy edge coloring and still reconstructs exactly,
+    with at most 2*max_degree - 1 rounds (greedy bound)."""
+    rng = np.random.RandomState(3)
+    n = 12
+    adj = (rng.rand(n, n) < 0.3).astype(int)
+    adj = np.maximum(adj, adj.T)
+    np.fill_diagonal(adj, 0)
+    adj[0, 1] = adj[1, 0] = 1              # keep it connected enough
+    topo = _from_adjacency("erdos", adj)
+    sched = compile_schedule(topo)
+    np.testing.assert_allclose(sched.mixing_matrix(), topo.W,
+                               rtol=0, atol=1e-12)
+    max_deg = int(adj.sum(1).max())
+    assert sched.n_rounds <= 2 * max_deg - 1
+
+
+def test_torus_grid_override():
+    """The trainer maps the torus onto the (pod, data) mesh grid; the same
+    topology must compile against a caller-supplied factorization."""
+    topo = torus2d(2, 8)
+    sched = compile_schedule(topo, grid=(2, 8))
+    np.testing.assert_allclose(sched.mixing_matrix(), topo.W, atol=1e-12)
+    assert sched.n_rounds == 3             # 1 (rows=2) + 2 (cols=8)
+    # wrong grid: the structured decomposition mismatches W, and the
+    # compiler must fall back to edge coloring rather than mis-compile
+    sched_bad_grid = compile_schedule(topo, grid=(4, 4))
+    np.testing.assert_allclose(sched_bad_grid.mixing_matrix(), topo.W,
+                               atol=1e-12)
+
+
+def test_time_varying_sequence():
+    scheds = compile_schedules([ring(8), hypercube(8)])
+    assert [s.name for s in scheds] == ["ring", "hypercube"]
+    with pytest.raises(ValueError):
+        compile_schedules([ring(8), ring(4)])
+    with pytest.raises(ValueError):
+        compile_schedules([])
+
+
+def test_asymmetric_W_rejected():
+    W = np.eye(3)
+    W[0, 1] = 0.5
+    bad = Topology("bad", W, ((0, 1), (1,), (2,)))
+    with pytest.raises(ValueError):
+        compile_schedule(bad)
+
+
+def test_uniform_weight_collapse():
+    """Uniform-averaging families must compile to scalar (python float)
+    round weights — the engine keeps them weak-typed so the schedule-driven
+    ring/torus paths stay bit-identical to the pre-schedule engines."""
+    for topo in (ring(8), torus2d(2, 4), hypercube(8), fully_connected(8)):
+        sched = compile_schedule(topo)
+        assert sched.self_weight is not None, topo.name
+        assert all(r.weight is not None for r in sched.rounds), topo.name
+    # star/chain have non-uniform diagonals (Metropolis-Hastings)
+    assert compile_schedule(star(8)).self_weight is None
+    assert compile_schedule(chain(8)).self_weight is None

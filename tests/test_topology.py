@@ -51,3 +51,21 @@ def test_make_topology_registry():
     assert make_topology("torus", 12).n == 12
     with pytest.raises(ValueError):
         make_topology("nope", 4)
+
+
+@pytest.mark.parametrize("n", [7, 13, 31])
+def test_torus_rejects_degenerate_factorization(n):
+    """Prime n factors as a 1 x n strip whose spectral gap is ring-grade
+    O(1/n^2), not the advertised torus O(1/n) — must fail fast, not
+    silently mis-advertise the mixing rate."""
+    with pytest.raises(ValueError, match="ring"):
+        make_topology("torus", n)
+
+
+def test_torus_composite_factorizations_stay_valid():
+    for n in (4, 8, 12, 16, 64):
+        t = make_topology("torus", n)
+        assert t.n == n
+        t.validate()
+    # a real torus mixes strictly better than the same-n ring
+    assert make_topology("torus", 16).delta > make_topology("ring", 16).delta
