@@ -30,7 +30,6 @@ from repro.models.transformer import count_params
 from repro.train.trainer import DecentralizedTrainer
 from repro.optim import momentum_sgd, cosine_schedule
 from repro.data.synthetic import make_lm_batch_fn
-from repro.checkpoint.checkpointing import save_pytree
 
 
 def main():
@@ -93,9 +92,11 @@ def main():
                   f"({(time.time() - t0) / (i + 1):.2f}s/step)")
 
     if args.checkpoint:
-        save_pytree(args.checkpoint, jax.device_get(state),
-                    metadata={"step": args.steps, "arch": cfg.name})
-        print(f"saved checkpoint to {args.checkpoint}.npz")
+        trainer.save_checkpoint(args.checkpoint, state,
+                                metadata={"arch": cfg.name})
+        print(f"saved sharded checkpoint to {args.checkpoint}/ "
+              f"(manifest.json + per-host shards; resume via "
+              f"launch/train.py --resume)")
 
 
 if __name__ == "__main__":

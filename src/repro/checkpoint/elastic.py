@@ -1,0 +1,99 @@
+"""Elastic restore policy: remap the leading node dim when n_nodes changes.
+
+Every decentralized leaf (params, optimizer moments, CHOCO x_hat / s) carries
+a leading node dim of size n_nodes — the rows x_i of Algorithm 2.  When a
+checkpoint saved with ``n_old`` nodes is restored onto ``n_new`` nodes, the
+mixing matrix W, its spectral gap delta, and hence the Theorem-2 consensus
+stepsize gamma all change, so the old state cannot be used verbatim.  The
+policy (documented here and in EXPERIMENTS.md):
+
+  * **grow** (``n_new % n_old == 0``, ratio r): cyclic tile —
+    ``new[j] = old[j % n_old]``.  Replicas of the same old node land r node
+    ids apart, so on ring / torus / chain graphs adjacent new nodes hold
+    DIFFERENT models and the first gossip rounds mix real disagreement
+    instead of shuffling identical copies.
+  * **shrink** (``n_old % n_new == 0``, ratio r): strided mean —
+    ``new[j] = mean(old[j::n_new])`` (computed in float32, cast back).
+    This is the exact inverse of the grow policy (tile then shrink
+    round-trips bit-wise for r=1, value-wise otherwise) and matches
+    consensus semantics: the surviving node represents the average of the
+    models it absorbs.
+  * anything else raises :class:`ElasticRestoreError` — a non-divisible
+    resize has no canonical correspondence between old and new rows.
+
+The CHOCO error-feedback states x_hat and s are NOT remapped: x_hat_i is the
+*public* copy every neighbour j integrated via the old W, and s_i is the
+old-W-weighted aggregate sum_j w_ij x_hat_j.  Under the new W both are stale
+in a way error feedback cannot repair (Theorem 2's Lyapunov function couples
+them to the fixed mixing matrix), so they are re-zeroed and re-built by a
+logged consensus warmup of k CHOCO-GOSSIP rounds (Algorithm 1) before
+training resumes — see :func:`consensus_warmup_rounds`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+from repro.checkpoint.manifest import ElasticRestoreError
+
+
+def elastic_ratio(n_old: int, n_new: int) -> Tuple[str, int]:
+    """("grow"|"shrink"|"same", ratio) or raise ElasticRestoreError."""
+    if n_old == n_new:
+        return "same", 1
+    if n_old <= 0 or n_new <= 0:
+        raise ElasticRestoreError(f"invalid node counts {n_old} -> {n_new}")
+    if n_new % n_old == 0:
+        return "grow", n_new // n_old
+    if n_old % n_new == 0:
+        return "shrink", n_old // n_new
+    raise ElasticRestoreError(
+        f"cannot elastically restore n_nodes={n_old} -> {n_new}: the policy "
+        f"needs one count to divide the other (cyclic tile on grow, strided "
+        f"mean on shrink); resize to a multiple or re-initialise")
+
+
+def source_rows(new_row: int, n_old: int, n_new: int) -> Tuple[int, ...]:
+    """Old node rows feeding new node ``new_row`` under the policy."""
+    kind, _ = elastic_ratio(n_old, n_new)
+    if kind in ("same", "grow"):
+        return (new_row % n_old,)
+    return tuple(range(new_row, n_old, n_new))          # strided mean set
+
+
+def remap_rows(old: np.ndarray, n_new: int) -> np.ndarray:
+    """Apply the policy to a host array with leading node dim (reference
+    implementation; the sharded restore applies the same map per shard)."""
+    n_old = old.shape[0]
+    kind, _ = elastic_ratio(n_old, n_new)
+    if kind == "same":
+        return old
+    if kind == "grow":
+        return old[np.arange(n_new) % n_old]
+    acc = old.astype(np.float32).reshape(-1, n_new, *old.shape[1:])
+    return acc.mean(axis=0).astype(old.dtype)
+
+
+def consensus_warmup_rounds(delta: float, *, target: float = 0.25,
+                            cap: int = 64) -> int:
+    """Rounds k of CHOCO-GOSSIP warmup after an elastic restore.
+
+    Exact gossip contracts consensus error by (1 - delta) per round
+    (spectral gap of the NEW graph), so k = ceil(log(target)/log(1-delta))
+    rounds shrink the tile/mean-induced disagreement — and the re-zeroed
+    ||x - x_hat|| term, which starts at ||x|| and contracts at least as fast
+    once the public copies are seeded — to a `target` fraction.  The
+    Theorem-2 rate (1 - delta^2 omega / 82) is the worst-case guarantee for
+    the COUPLED Lyapunov function; using it here would prescribe ~1e6 rounds
+    of pure warmup, which is the bound's looseness, not a real requirement
+    (see EXPERIMENTS.md §Checkpointing).  `cap` bounds pathological graphs
+    (chain/ring at large n, delta -> 0).
+    """
+    if not 0.0 < delta <= 1.0:
+        raise ElasticRestoreError(f"spectral gap delta={delta} outside (0, 1]")
+    if delta == 1.0:                                    # fully connected
+        return 1
+    k = math.ceil(math.log(target) / math.log(1.0 - delta))
+    return max(1, min(cap, k))

@@ -1,0 +1,209 @@
+"""Checkpoint manifest: schema, typed errors, and tree validation.
+
+A sharded checkpoint is a directory:
+
+    <dir>/
+      manifest.json             # written LAST, by process 0 — its presence
+                                #   marks the checkpoint complete
+      shards-p00000.npz         # process 0's addressable shards
+      shards-p00000.index.json  # entry name -> (leaf key, global offsets)
+      shards-p00001.npz ...     # one pair per host
+
+``manifest.json`` records the flat tree structure (keys joined with "__",
+matching the legacy flat-npz naming), per-leaf GLOBAL shape, the TRUE dtype
+(``bfloat16`` — not the ``uint16`` bit-cast it is stored as), the training
+fingerprint (mesh axes, gossip topology, ``gossip_steps``, ``n_nodes``,
+``state_dtype``) and the step.  Restore validates the target tree against it
+and raises :class:`TreeMismatchError` enumerating every missing / extra /
+shape- or dtype-mismatched leaf — never a bare ``assert`` (stripped under
+``python -O``) or a raw ``KeyError``.
+
+This module is jax-free on purpose: launchers can read a manifest (to anchor
+the LR schedule, pick the mesh, or decide on elastic restore) before jax is
+imported and XLA_FLAGS are frozen.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+MANIFEST_NAME = "manifest.json"
+FORMAT_NAME = "choco-sharded"
+FORMAT_VERSION = 1
+
+# dtypes npz cannot serialize natively -> lossless bit-cast storage dtype
+STORAGE_DTYPES = {"bfloat16": "uint16"}
+
+
+class CheckpointError(Exception):
+    """Base for every checkpoint-layer failure."""
+
+
+class ManifestError(CheckpointError):
+    """Missing, unreadable, or incompatible manifest.json."""
+
+
+class TreeMismatchError(CheckpointError):
+    """Checkpoint tree does not match the restore target.
+
+    Carries the full enumeration so one failed restore reports every
+    problem at once instead of dying on the first key.
+    """
+
+    def __init__(self, missing: Sequence[str], extra: Sequence[str],
+                 mismatched: Sequence[Tuple[str, str, str, str]]):
+        self.missing = tuple(missing)      # keys absent from the checkpoint
+        self.extra = tuple(extra)          # checkpoint keys the target lacks
+        self.mismatched = tuple(mismatched)  # (key, field, saved, expected)
+        lines = []
+        if self.missing:
+            lines.append("missing from checkpoint: " + ", ".join(self.missing))
+        if self.extra:
+            lines.append("extra in checkpoint: " + ", ".join(self.extra))
+        for key, field, saved, expected in self.mismatched:
+            lines.append(f"{key}: saved {field} {saved} != expected {expected}")
+        super().__init__("checkpoint tree mismatch — " + "; ".join(lines))
+
+
+class ShardCoverageError(CheckpointError):
+    """Stored shards do not fully cover a requested leaf region (host file
+    deleted, or a save from a partial set of processes)."""
+
+
+class ElasticRestoreError(CheckpointError):
+    """Node-count change the elastic remap policy cannot express."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    shape: Tuple[int, ...]
+    dtype: str            # true dtype, e.g. "bfloat16"
+    storage: str          # on-disk dtype, e.g. "uint16" (bit-cast)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"shape": list(self.shape), "dtype": self.dtype,
+                "storage": self.storage}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "LeafSpec":
+        return cls(shape=tuple(d["shape"]), dtype=d["dtype"],
+                   storage=d["storage"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Manifest:
+    step: int
+    leaves: Dict[str, LeafSpec]             # flat key -> leaf spec
+    fingerprint: Dict[str, Any]             # mesh / topology / gossip_steps...
+    metadata: Dict[str, Any]
+    process_count: int = 1
+    version: int = FORMAT_VERSION
+
+    @property
+    def n_nodes(self) -> Optional[int]:
+        return self.fingerprint.get("n_nodes")
+
+
+def storage_dtype(dtype_name: str) -> str:
+    """On-disk dtype for a leaf dtype (bit-cast for npz-hostile dtypes)."""
+    return STORAGE_DTYPES.get(dtype_name, dtype_name)
+
+
+def manifest_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, MANIFEST_NAME)
+
+
+def is_sharded_checkpoint(path: str) -> bool:
+    return os.path.isfile(manifest_path(path))
+
+
+def write_manifest(ckpt_dir: str, manifest: Manifest) -> str:
+    """Atomically write manifest.json (tmp + rename: a torn write must never
+    look like a complete checkpoint)."""
+    doc = {
+        "format": FORMAT_NAME,
+        "version": manifest.version,
+        "step": manifest.step,
+        "process_count": manifest.process_count,
+        "fingerprint": manifest.fingerprint,
+        "metadata": manifest.metadata,
+        "leaves": {k: s.to_json() for k, s in manifest.leaves.items()},
+    }
+    path = manifest_path(ckpt_dir)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def read_manifest(ckpt_dir: str) -> Manifest:
+    path = manifest_path(ckpt_dir)
+    if not os.path.isfile(path):
+        raise ManifestError(
+            f"no {MANIFEST_NAME} under {ckpt_dir!r} — not a sharded "
+            f"checkpoint (legacy flat-npz checkpoints are a single .npz "
+            f"file, restored via restore_pytree)")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ManifestError(f"unreadable manifest {path!r}: {e}") from e
+    if doc.get("format") != FORMAT_NAME:
+        raise ManifestError(
+            f"{path!r} has format {doc.get('format')!r}, expected "
+            f"{FORMAT_NAME!r}")
+    if doc.get("version", 0) > FORMAT_VERSION:
+        raise ManifestError(
+            f"{path!r} is version {doc['version']}, newer than this "
+            f"reader's {FORMAT_VERSION}")
+    return Manifest(
+        step=int(doc["step"]),
+        leaves={k: LeafSpec.from_json(s) for k, s in doc["leaves"].items()},
+        fingerprint=doc.get("fingerprint", {}),
+        metadata=doc.get("metadata", {}),
+        process_count=int(doc.get("process_count", 1)),
+        version=int(doc.get("version", FORMAT_VERSION)),
+    )
+
+
+def validate_tree(saved: Dict[str, LeafSpec],
+                  expected: Dict[str, Tuple[Tuple[int, ...], str]],
+                  *, node_remap: Optional[Tuple[int, int]] = None,
+                  reset_keys: Sequence[str] = ()) -> None:
+    """Check the saved leaf set against the restore target's
+    ``{key: (shape, dtype)}``; raise :class:`TreeMismatchError` enumerating
+    every problem.
+
+    node_remap=(n_old, n_new): an elastic restore — leaves whose saved shape
+    is ``(n_old, *rest)`` where the target expects ``(n_new, *rest)`` are
+    accepted (the restore remaps the leading node dim).
+    reset_keys: flat keys the restore will zero-fill instead of read (the
+    CHOCO x_hat / s states under elastic restore); they must still exist in
+    the checkpoint (same tree), but their node extent is not compared.
+    """
+    missing = sorted(set(expected) - set(saved))
+    extra = sorted(set(saved) - set(expected))
+    mismatched: List[Tuple[str, str, str, str]] = []
+    reset = set(reset_keys)
+    for key in sorted(set(saved) & set(expected)):
+        spec = saved[key]
+        shape, dtype = expected[key]
+        shape_ok = spec.shape == tuple(shape)
+        if not shape_ok and node_remap is not None and spec.shape and shape:
+            n_old, n_new = node_remap
+            shape_ok = (spec.shape[0] == n_old and shape[0] == n_new
+                        and spec.shape[1:] == tuple(shape[1:]))
+        if not shape_ok and key in reset and spec.shape and shape:
+            shape_ok = spec.shape[1:] == tuple(shape[1:])
+        if not shape_ok:
+            mismatched.append((key, "shape", str(spec.shape),
+                               str(tuple(shape))))
+        # reset keys are zero-filled in the TARGET dtype without reading the
+        # saved bytes, so a state_dtype change there is not a mismatch
+        if spec.dtype != dtype and key not in reset:
+            mismatched.append((key, "dtype", spec.dtype, dtype))
+    if missing or extra or mismatched:
+        raise TreeMismatchError(missing, extra, mismatched)

@@ -1,5 +1,6 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.env import simulate_host_devices  # jax-free: pre-XLA_FLAGS
+simulate_host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
 combination against the production mesh, print memory/cost analysis and the

@@ -1,0 +1,21 @@
+"""jax-free process-environment helpers (safe to import before XLA_FLAGS
+is frozen by the first jax import)."""
+from __future__ import annotations
+
+import os
+
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def simulate_host_devices(n: int) -> str:
+    """Request ``n`` simulated host devices by APPENDING to XLA_FLAGS.
+
+    Never clobbers pre-set flags (a user's --xla_dump_to etc. must survive
+    --simulate-devices); any pre-existing device-count flag is replaced by
+    ours, since XLA's last-wins duplicate handling is not a contract worth
+    leaning on.  Must be called before jax is imported."""
+    keep = [t for t in os.environ.get("XLA_FLAGS", "").split()
+            if not t.startswith(_DEVICE_COUNT_FLAG + "=")]
+    keep.append(f"{_DEVICE_COUNT_FLAG}={int(n)}")
+    os.environ["XLA_FLAGS"] = " ".join(keep)
+    return os.environ["XLA_FLAGS"]

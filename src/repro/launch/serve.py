@@ -9,6 +9,8 @@ import os
 import sys
 import time
 
+from repro.launch.env import simulate_host_devices  # jax-free: pre-XLA_FLAGS
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -23,8 +25,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.simulate_devices:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.simulate_devices}")
+        simulate_host_devices(args.simulate_devices)
 
     import jax
     import jax.numpy as jnp

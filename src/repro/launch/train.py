@@ -6,6 +6,18 @@ simulates the mesh with host devices for integration testing.
 
     python -m repro.launch.train --arch qwen3-1.7b --shape train_4k \
         --mode choco --compressor top_k --fraction 0.01 --steps 100
+
+Checkpoints are sharded directories (manifest.json + per-host shard files;
+see checkpoint/checkpointing.py).  ``--steps`` is the TOTAL step budget:
+resuming a step-60 checkpoint with ``--steps 100`` trains 40 more steps and
+the cosine schedule continues from step 60 (anchored by the manifest step),
+it does not restart.  A checkpoint saved with a different ``n_nodes`` is
+restored elastically (params tiled/averaged across the node dim, CHOCO
+x_hat/s re-zeroed + consensus warmup — checkpoint/elastic.py):
+
+    python -m repro.launch.train --arch qwen3-1.7b --smoke --steps 100 \
+        --simulate-devices 8 --mesh 8x1 \
+        --resume ckpts/step60 --checkpoint-dir ckpts --checkpoint-every 20
 """
 import argparse
 import dataclasses
@@ -13,7 +25,9 @@ import os
 import sys
 import time
 
-from repro.configs.base import parse_topology  # jax-free: safe pre-XLA_FLAGS
+# jax-free imports: safe before XLA_FLAGS is frozen by the first jax import
+from repro.configs.base import parse_topology
+from repro.launch.env import simulate_host_devices
 
 # mirrors core.topology._TOPOLOGIES; kept literal so arg validation never
 # imports jax before XLA_FLAGS is set
@@ -59,7 +73,13 @@ def main(argv=None):
     ap.add_argument("--heterogeneity", type=float, default=1.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
-    ap.add_argument("--resume", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="sharded checkpoint dir (manifest.json) or a legacy "
+                         "flat .npz; --steps stays the TOTAL budget")
+    ap.add_argument("--elastic-warmup-rounds", type=int, default=None,
+                    help="CHOCO-GOSSIP warmup rounds after an elastic "
+                         "restore (default: derived from the new topology's "
+                         "spectral gap)")
     ap.add_argument("--simulate-devices", type=int, default=0,
                     help=">0: simulate N host devices (CPU testing)")
     ap.add_argument("--mesh", default=None,
@@ -84,8 +104,7 @@ def main(argv=None):
                  "it takes no --fraction")
 
     if args.simulate_devices:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.simulate_devices}")
+        simulate_host_devices(args.simulate_devices)
 
     import jax
     import jax.numpy as jnp
@@ -96,7 +115,9 @@ def main(argv=None):
     from repro.optim import make_optimizer, cosine_schedule
     from repro.data.synthetic import make_lm_batch_fn
     from repro.launch.mesh import make_production_mesh, make_mesh, gossip_axis_for
-    from repro.checkpoint.checkpointing import save_pytree, restore_pytree
+    from repro.checkpoint.checkpointing import restore_pytree
+    from repro.checkpoint.manifest import (is_sharded_checkpoint,
+                                           read_manifest)
 
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
@@ -134,10 +155,46 @@ def main(argv=None):
                               total=args.steps),
         mode=args.mode)
 
-    state = trainer.init_state(jax.random.PRNGKey(0))
+    def budget_check(resumed):
+        if resumed >= args.steps:
+            raise SystemExit(
+                f"[train] --steps {args.steps} is the TOTAL step budget, but "
+                f"{args.resume} is already at step {resumed}: nothing to do "
+                f"(raise --steps; the LR schedule stays anchored at step 0 "
+                f"over the full budget)")
+
+    resumed = 0
     if args.resume:
-        state = restore_pytree(args.resume, jax.eval_shape(lambda: state))
-        print(f"[train] resumed from {args.resume} at step {int(state.step)}")
+        # a directory is always the sharded format: a torn save (no
+        # manifest) surfaces as ManifestError, never as a bogus .npz lookup
+        if os.path.isdir(args.resume) or is_sharded_checkpoint(args.resume):
+            # budget check BEFORE restore/warmup — an exhausted resume must
+            # not pay compilation + gossip rounds just to exit
+            budget_check(read_manifest(args.resume).step)
+            # restore directly under the trainer's shardings: no host-gather,
+            # no throwaway init_state allocation
+            state, man, warmup = trainer.restore_checkpoint(args.resume)
+            resumed = man.step
+            rounds = (args.elastic_warmup_rounds
+                      if args.elastic_warmup_rounds is not None else warmup)
+            if warmup and rounds:
+                print(f"[train] elastic restore: checkpoint "
+                      f"n_nodes={man.n_nodes} "
+                      f"topology={man.fingerprint.get('topology')} -> "
+                      f"n_nodes={n_nodes} topology={args.topology}; x_hat/s "
+                      f"re-zeroed, consensus warmup {rounds} CHOCO-GOSSIP "
+                      f"rounds (re-derived Theorem-2 "
+                      f"gamma={trainer.gamma:.3e})", flush=True)
+                state = trainer.consensus_warmup(state, rounds)
+        else:   # legacy flat npz
+            state = jax.device_put(
+                restore_pytree(args.resume, trainer.state_shape()),
+                trainer.state_shardings())
+            resumed = int(jax.device_get(state.step))
+            budget_check(resumed)
+        print(f"[train] resumed from {args.resume} at step {resumed}")
+    else:
+        state = trainer.init_state(jax.random.PRNGKey(0))
 
     seq = args.seq_len or min(cfg.n_layers * 64, 512)
     bpn = args.batch_per_node or 4
@@ -147,9 +204,10 @@ def main(argv=None):
                                         jax.eval_shape(lambda: batch0))
 
     t0 = time.time()
-    for i in range(args.steps):
+    remaining = args.steps - resumed       # --steps is the TOTAL budget
+    for i in range(remaining):
         state, mets = step_fn(state, jax.tree.map(jnp.asarray, next_batch()))
-        if i % 10 == 0 or i == args.steps - 1:
+        if i % 10 == 0 or i == remaining - 1:
             print(f"[train] step {int(state.step):5d} "
                   f"loss {float(mets['loss']):.4f} "
                   f"lr {float(mets['lr']):.4f} "
@@ -157,8 +215,7 @@ def main(argv=None):
         if (args.checkpoint_dir and args.checkpoint_every
                 and (i + 1) % args.checkpoint_every == 0):
             path = os.path.join(args.checkpoint_dir, f"step{int(state.step)}")
-            save_pytree(path, jax.device_get(state),
-                        metadata={"step": int(state.step), "arch": cfg.name})
+            trainer.save_checkpoint(path, state, metadata={"arch": cfg.name})
             print(f"[train] checkpointed {path}", flush=True)
     return 0
 

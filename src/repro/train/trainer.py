@@ -174,12 +174,106 @@ class DecentralizedTrainer:
                           s=pspec(state_shape.s),
                           opt=opt_spec, step=P(), key=P())
 
+    def state_shardings(self, state_shape=None) -> TrainState:
+        """NamedSharding pytree for the TrainState — the target layout the
+        sharded checkpoint restore builds global arrays under directly."""
+        shape = state_shape if state_shape is not None else self.state_shape()
+        specs = self.state_pspecs(shape)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
     def init_state(self, key) -> TrainState:
         shape = self.state_shape(key)
-        specs = self.state_pspecs(shape)
-        shardings = jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs,
-                                 is_leaf=lambda x: isinstance(x, P))
-        return jax.jit(self._init_state_fn(), out_shardings=shardings)(key)
+        return jax.jit(self._init_state_fn(),
+                       out_shardings=self.state_shardings(shape))(key)
+
+    # -- checkpointing ---------------------------------------------------------
+
+    def fingerprint(self) -> dict:
+        """Manifest fingerprint: everything the restore path needs to decide
+        whether a checkpoint is resume-exact, elastic, or incompatible."""
+        axes = (self.gossip_axis if isinstance(self.gossip_axis, tuple)
+                else (self.gossip_axis,))
+        return {
+            "mesh": {a: int(s) for a, s in zip(self.mesh.axis_names,
+                                               self.mesh.devices.shape)},
+            "gossip_axes": list(axes),
+            "n_nodes": int(self.n_nodes),
+            "topology": self.choco.topology,
+            "gossip_steps": int(self.choco.gossip_steps),
+            "mode": self.mode,
+            "compressor": self.choco.compressor,
+            "state_dtype": self.choco.state_dtype,
+        }
+
+    def save_checkpoint(self, path: str, state: TrainState,
+                        metadata: Optional[dict] = None) -> str:
+        """Sharded per-host save of the full TrainState (including the CHOCO
+        error-feedback states — Theorem 2 needs them across restarts)."""
+        from repro.checkpoint.checkpointing import save_sharded
+        return save_sharded(path, state, step=int(jax.device_get(state.step)),
+                            fingerprint=self.fingerprint(),
+                            metadata=metadata or {})
+
+    def restore_checkpoint(self, path: str) -> Tuple[TrainState, Any, int]:
+        """Restore a sharded checkpoint directly under this trainer's
+        shardings (no host-gather, no throwaway init_state donor).
+
+        Returns (state, manifest, warmup_rounds): warmup_rounds > 0 means
+        the checkpoint needed an elastic / re-mixed restore — params (and
+        optimizer moments) were re-mapped across the node dim, x_hat and s
+        were re-zeroed (old public copies are invalid under the new mixing
+        matrix W and its Theorem-2 gamma), and the caller should run
+        ``consensus_warmup(state, warmup_rounds)`` before training.
+        """
+        from repro.checkpoint.checkpointing import restore_sharded
+        from repro.checkpoint.manifest import read_manifest
+        from repro.checkpoint.elastic import (consensus_warmup_rounds,
+                                              elastic_ratio)
+        man = read_manifest(path)
+        shape = self.state_shape()
+        shardings = self.state_shardings(shape)
+        n_old = man.n_nodes
+        saved_topo = man.fingerprint.get("topology")
+        same_nodes = n_old is None or n_old == self.n_nodes
+        same_graph = saved_topo is None or saved_topo == self.choco.topology
+        if same_nodes and (self.mode != "choco" or same_graph):
+            return restore_sharded(path, shape, shardings), man, 0
+        if not same_nodes:
+            elastic_ratio(n_old, self.n_nodes)   # fail fast on bad resize
+            state = restore_sharded(path, shape, shardings,
+                                    node_remap=(n_old, self.n_nodes),
+                                    reset_prefixes=("x_hat", "s"))
+        else:
+            # same n, different gossip graph: s = sum_j w_ij x_hat_j is an
+            # OLD-W aggregate — stale under the new schedule, so re-mix too
+            state = restore_sharded(path, shape, shardings,
+                                    reset_prefixes=("x_hat", "s"))
+        if self.mode != "choco":      # no EF state to re-seed in exact modes
+            return state, man, 0
+        delta = min(t.delta for t in self.topologies)
+        return state, man, consensus_warmup_rounds(delta)
+
+    def consensus_warmup(self, state: TrainState, rounds: int) -> TrainState:
+        """k rounds of CHOCO-GOSSIP (Algorithm 1) on the current params, no
+        gradient step: rebuilds the public copies x_hat and the neighbour
+        aggregates s under the CURRENT mixing matrix / Theorem-2 gamma after
+        an elastic restore.  Key folds are salted so warmup randomness never
+        collides with a training step's fold_in(key, step)."""
+        if rounds <= 0 or self.mode != "choco":
+            return state
+        exchange = self._exchange(state.params)
+
+        def warm(st):
+            x, xh, s = st.params, st.x_hat, st.s
+            base = jax.random.fold_in(st.key, 0x5EED)
+            for r in range(rounds):
+                x, xh, s = exchange(jax.random.fold_in(base, r), x, xh, s)
+            return st._replace(params=x, x_hat=xh, s=s)
+
+        shardings = self.state_shardings(jax.eval_shape(lambda: state))
+        return jax.jit(warm, out_shardings=shardings,
+                       donate_argnums=0)(state)
 
     # -- step -----------------------------------------------------------------
 

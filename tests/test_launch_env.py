@@ -1,0 +1,26 @@
+"""--simulate-devices must APPEND to XLA_FLAGS, never clobber them."""
+from repro.launch.env import simulate_host_devices
+
+
+def test_appends_to_preset_flags(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_dump_to=/tmp/dump --xla_foo=1")
+    got = simulate_host_devices(8)
+    toks = got.split()
+    assert "--xla_dump_to=/tmp/dump" in toks
+    assert "--xla_foo=1" in toks
+    assert "--xla_force_host_platform_device_count=8" in toks
+
+
+def test_replaces_stale_device_count(monkeypatch):
+    monkeypatch.setenv(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=2 --xla_foo=1")
+    toks = simulate_host_devices(8).split()
+    assert toks.count("--xla_force_host_platform_device_count=8") == 1
+    assert "--xla_force_host_platform_device_count=2" not in toks
+    assert "--xla_foo=1" in toks
+
+
+def test_unset_env(monkeypatch):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    assert simulate_host_devices(4) == \
+        "--xla_force_host_platform_device_count=4"
