@@ -1,0 +1,100 @@
+"""Stochastic topology processes + directed push-sum (EXPERIMENTS.md §Perf F).
+
+Sections:
+  * process_rate    — consensus error after T gossip rounds: static schedule
+                      vs randomized matchings (uniform / weighted samplers)
+                      vs link failures (p in {0.1, 0.3}), on the matrix
+                      simulators of comm/stochastic.py.  The derived column
+                      carries the per-step collective cost: a matching step
+                      ships ONE permute round; static and linkfail ship all
+                      n_rounds of the compiled schedule.
+  * pushsum_directed — compressed push-sum on directed graphs: de-biased
+                      consensus error x/w vs the true average after T
+                      rounds, with the exact (identity) run as reference.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import TopK, Identity, make_topology, directed_ring, \
+    random_digraph, run_pushsum_gossip
+from repro.comm.schedule import compile_schedule, compile_directed_schedule
+from repro.comm.stochastic import (LinkFailureProcess, MatchingProcess,
+                                   run_choco_gossip_process)
+from repro.core.choco_gossip import (choco_gossip_round_efficient,
+                                     init_efficient_state)
+from .common import time_fn, emit
+
+N, D, STEPS = 8, 256, 300
+
+
+def _consensus_err(x, xbar):
+    return float(jnp.mean(jnp.sum((x - xbar) ** 2, axis=-1)))
+
+
+def process_rate():
+    comp = TopK(k=64)
+    gamma = 0.4
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (N, D))
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+    for name in ("ring", "hypercube"):
+        topo = make_topology(name, N)
+        sched = compile_schedule(topo)
+        W = jnp.asarray(topo.W)
+
+        def static_run():
+            st = init_efficient_state(x0)
+            for _ in range(STEPS):
+                st = choco_gossip_round_efficient(st, W, gamma, comp)
+            return st
+        us = time_fn(static_run, iters=1, warmup=1)
+        err = _consensus_err(static_run().x, xbar)
+        emit(f"stochastic/static_{name}", us,
+             f"err={err:.3e};permute_rounds_per_step={sched.n_rounds}")
+
+        for sampler in ("uniform", "weighted"):
+            proc = MatchingProcess(sched, sampler=sampler)
+            fn = lambda p=proc: run_choco_gossip_process(
+                x0, p, gamma, comp, STEPS)
+            us = time_fn(fn, iters=1, warmup=1)
+            _, errs = fn()
+            emit(f"stochastic/matching_{sampler}_{name}", us,
+                 f"err={float(errs[-1]):.3e};permute_rounds_per_step=1")
+
+        for p in (0.1, 0.3):
+            proc = LinkFailureProcess(sched, drop_prob=p)
+            fn = lambda pr=proc: run_choco_gossip_process(
+                x0, pr, 0.3, comp, STEPS)
+            us = time_fn(fn, iters=1, warmup=1)
+            _, errs = fn()
+            emit(f"stochastic/linkfail_p{p}_{name}", us,
+                 f"err={float(errs[-1]):.3e};"
+                 f"permute_rounds_per_step={sched.n_rounds};"
+                 f"expected_delta={proc.expected_delta_beta()[0]:.4f}")
+
+
+def pushsum_directed():
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+    for topo in (directed_ring(N), random_digraph(N, 0.4, seed=1)):
+        sched = compile_directed_schedule(topo)
+        A = jnp.asarray(topo.A)
+        for comp, label, gamma in ((Identity(), "exact", 1.0),
+                                   (TopK(k=64), "top64", 0.5),
+                                   (TopK(k=26), "top10pct", 0.2)):
+            def fn():
+                final, errs = run_pushsum_gossip(x0, A, gamma, comp, STEPS)
+                return errs
+            us = time_fn(fn, iters=1, warmup=1)
+            errs = fn()
+            emit(f"stochastic/pushsum_{topo.name}_{label}", us,
+                 f"debias_err={float(errs[-1]):.3e};"
+                 f"rounds_per_step={sched.n_rounds};delta={topo.delta:.4f}")
+
+
+def run():
+    process_rate()
+    pushsum_directed()
+
+
+if __name__ == "__main__":
+    run()

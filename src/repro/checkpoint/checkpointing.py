@@ -32,12 +32,12 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manifest import (
-    CheckpointError, LeafSpec, Manifest, ManifestError, ShardCoverageError,
-    TreeMismatchError, is_sharded_checkpoint, read_manifest, storage_dtype,
-    validate_tree, write_manifest)
+    FLAT_KEY_SEP, CheckpointError, LeafSpec, Manifest, ManifestError,
+    ShardCoverageError, TreeMismatchError, is_sharded_checkpoint, key_prefix,
+    read_manifest, storage_dtype, validate_tree, write_manifest)
 from repro.checkpoint.elastic import elastic_ratio, source_rows
 
-_SEP = "__"
+_SEP = FLAT_KEY_SEP
 _ENTRY_SEP = "@"          # npz entry name: "<leaf key>@<shard number>"
 
 
@@ -78,11 +78,19 @@ def _slices_to_bounds(index: Tuple, shape: Tuple[int, ...]):
 
 def save_sharded(ckpt_dir: str, tree, *, step: int,
                  fingerprint: Optional[Dict[str, Any]] = None,
-                 metadata: Optional[Dict[str, Any]] = None) -> str:
+                 metadata: Optional[Dict[str, Any]] = None,
+                 keep_last: Optional[int] = None) -> str:
     """Per-host sharded save.  Each process writes the shards it owns
     (``replica_id == 0`` — exactly one owner per global tile, so shards
     never overlap across hosts) plus an index sidecar; process 0 writes the
     manifest LAST, so a manifest's presence marks the checkpoint complete.
+
+    keep_last: retention/GC — after the manifest is published, delete all
+    but the newest ``keep_last`` completed sibling checkpoints (directories
+    of ``ckpt_dir``'s parent that hold a readable manifest), never the one
+    just written.  Runs only on process 0, only after the save succeeded, so
+    a crashed save can never delete the checkpoints it was meant to
+    supersede.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
     pidx = jax.process_index()
@@ -124,7 +132,46 @@ def save_sharded(ckpt_dir: str, tree, *, step: int,
             fingerprint=dict(fingerprint or {}),
             metadata=dict(metadata or {}),
             process_count=jax.process_count()))
+        if keep_last is not None:
+            gc_checkpoints(os.path.dirname(os.path.abspath(ckpt_dir)),
+                           keep_last, protect=ckpt_dir)
     return ckpt_dir
+
+
+def gc_checkpoints(parent_dir: str, keep_last: int,
+                   protect: Optional[str] = None) -> List[str]:
+    """Delete all but the newest ``keep_last`` COMPLETED checkpoints under
+    ``parent_dir`` (subdirectories with a readable manifest, ordered by
+    manifest step).  ``protect`` (the checkpoint just written) is never
+    deleted even if ``keep_last`` would drop it.  Torn directories without a
+    manifest are left alone — they were never published, and deleting them
+    here could race a concurrent writer.  Returns the deleted paths."""
+    import shutil
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    protect_abs = os.path.abspath(protect) if protect else None
+    done = []
+    for name in sorted(os.listdir(parent_dir)):
+        path = os.path.join(parent_dir, name)
+        if not os.path.isdir(path) or not is_sharded_checkpoint(path):
+            continue
+        try:
+            man = read_manifest(path)
+        except CheckpointError:
+            continue
+        done.append((man.step, path))
+    done.sort(key=lambda sp: sp[0])
+    deleted = []
+    excess = len(done) - keep_last
+    for step_, path in done:
+        if excess <= 0:
+            break
+        if protect_abs and os.path.abspath(path) == protect_abs:
+            continue
+        shutil.rmtree(path)
+        deleted.append(path)
+        excess -= 1
+    return deleted
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +249,7 @@ class _ShardStore:
 def _reset_key_set(leaves: Dict[str, Any],
                    reset_prefixes: Sequence[str]) -> set:
     pref = set(reset_prefixes)
-    return {k for k in leaves if k.split(_SEP, 1)[0] in pref}
+    return {k for k in leaves if key_prefix(k) in pref}
 
 
 def restore_sharded(ckpt_dir: str, like, shardings=None, *,
@@ -229,7 +276,7 @@ def restore_sharded(ckpt_dir: str, like, shardings=None, *,
     expected = tree_leaf_specs(like)
     reset_keys = _reset_key_set(expected, reset_prefixes)
     validate_tree(man.leaves, expected, node_remap=node_remap,
-                  reset_keys=reset_keys)
+                  reset_keys=reset_keys, reset_prefixes=reset_prefixes)
     store = _ShardStore(ckpt_dir)
     flat_like = _flatten_with_keys(like)
     flat_shards = (dict(_flatten_with_keys(shardings))
@@ -239,8 +286,10 @@ def restore_sharded(ckpt_dir: str, like, shardings=None, *,
         for key, leaf in flat_like:
             true_dt = np.dtype(leaf.dtype)
             shape = tuple(leaf.shape)
-            spec = man.leaves[key]
-            remap = (node_remap is not None and shape
+            # reset keys may be absent from the checkpoint entirely (an
+            # engine change re-shaped the zero-filled subtree)
+            spec = man.leaves.get(key)
+            remap = (node_remap is not None and shape and spec is not None
                      and spec.shape != shape
                      and spec.shape[0] == node_remap[0])
 

@@ -33,6 +33,16 @@ MANIFEST_NAME = "manifest.json"
 FORMAT_NAME = "choco-sharded"
 FORMAT_VERSION = 1
 
+#: separator joining pytree path components into flat leaf keys — the single
+#: definition shared by the writer (checkpointing._path_key) and the
+#: validator's reset-prefix accounting below
+FLAT_KEY_SEP = "__"
+
+
+def key_prefix(key: str) -> str:
+    """Top-level tree field of a flat leaf key ("x_hat__0__w" -> "x_hat")."""
+    return key.split(FLAT_KEY_SEP, 1)[0]
+
 # dtypes npz cannot serialize natively -> lossless bit-cast storage dtype
 STORAGE_DTYPES = {"bfloat16": "uint16"}
 
@@ -172,7 +182,8 @@ def read_manifest(ckpt_dir: str) -> Manifest:
 def validate_tree(saved: Dict[str, LeafSpec],
                   expected: Dict[str, Tuple[Tuple[int, ...], str]],
                   *, node_remap: Optional[Tuple[int, int]] = None,
-                  reset_keys: Sequence[str] = ()) -> None:
+                  reset_keys: Sequence[str] = (),
+                  reset_prefixes: Sequence[str] = ()) -> None:
     """Check the saved leaf set against the restore target's
     ``{key: (shape, dtype)}``; raise :class:`TreeMismatchError` enumerating
     every problem.
@@ -181,11 +192,21 @@ def validate_tree(saved: Dict[str, LeafSpec],
     is ``(n_old, *rest)`` where the target expects ``(n_new, *rest)`` are
     accepted (the restore remaps the leading node dim).
     reset_keys: flat keys the restore will zero-fill instead of read (the
-    CHOCO x_hat / s states under elastic restore); they must still exist in
-    the checkpoint (same tree), but their node extent is not compared.
+    CHOCO x_hat / s states under elastic restore); their node extent and
+    dtype are not compared.
+    reset_prefixes: top-level tree fields being reset — keys under them are
+    also exempt from missing/extra accounting, because a gossip-engine
+    change can legitimately re-shape those subtrees (e.g. a topology
+    process turns the single x_hat tree into a per-round reference list);
+    the restore zero-fills the TARGET structure without reading any of the
+    saved bytes, so structural drift there is not a mismatch.
     """
-    missing = sorted(set(expected) - set(saved))
-    extra = sorted(set(saved) - set(expected))
+    pref = set(reset_prefixes)
+    under_reset = lambda key: key_prefix(key) in pref
+    missing = sorted(k for k in set(expected) - set(saved)
+                     if not under_reset(k))
+    extra = sorted(k for k in set(saved) - set(expected)
+                   if not under_reset(k))
     mismatched: List[Tuple[str, str, str, str]] = []
     reset = set(reset_keys)
     for key in sorted(set(saved) & set(expected)):

@@ -27,10 +27,21 @@ Two engines for the choco exchange:
   * ``per-leaf`` (legacy) — compress + ppermute every leaf separately; kept
     as the reference/bench baseline (see benchmarks/bench_collectives.py).
 
-Three exchange modes:
+Four exchange modes:
   * ``choco``     — Algorithm 2 lines 4-9 (compressed, error-feedback)
   * ``plain``     — Algorithm 3 line 4-5 (exact neighbour averaging)
   * ``allreduce`` — centralized mini-batch SGD baseline (pmean over the axes)
+  * ``pushsum``   — directed column-stochastic mixing with the (x, w) weight
+                    pair and de-biased x/w (comm/pushsum.py)
+
+Stochastic topologies: choco and plain also accept a ``TopologyProcess``
+(comm/stochastic.py) — a per-step distribution over mixing matrices
+(randomized matchings sampled one round at a time, or i.i.d. Bernoulli link
+failures).  Every node draws the identical sample from the shared exchange
+key (fold_in, zero communication).  The compressed process engine
+(:func:`make_process_choco_fn`) keeps per-round reference replicas instead
+of the static engine's running aggregate s — see its docstring for why s is
+unsound under time-varying W.
 """
 from __future__ import annotations
 
@@ -238,6 +249,76 @@ class _LazyFlatIndex:
         return self.value
 
 
+# ---------------------------------------------------------------------------
+# stochastic topology processes (comm/stochastic.py)
+# ---------------------------------------------------------------------------
+
+def _process_neighbor_sum(process, payloads, axis_arg, dense_fn, flat_idx_fn,
+                          sample_key, t):
+    """Sampled-round neighbour aggregate for the PLAIN engine under a
+    TopologyProcess (the payload is the fresh iterate x itself, so sampled
+    mixing is exact: x' = W_t x).
+
+    Returns (nbr_bufs, w_nbr, w_self) — the sampled-step analogue of
+    ``_neighbor_sum`` + ``_self_weight``.  ``sample_key`` is the exchange key
+    BEFORE the per-axis fold-ins, so every node draws the identical sample
+    (fold_in(key, SAMPLE_SALT + t) — see comm/stochastic.py) without
+    communication.
+
+    * matching — ``lax.switch`` over one-ppermute branches: only the sampled
+      round's permute executes, so a k-round schedule costs ONE collective
+      launch per gossip round instead of k.  Receive/self weights are the
+      process's 1/p_r-scaled vectors, gathered at the local node id (f32 in
+      every branch, so all switch branches have identical avals).
+    * linkfail — every compiled round still ships (the payload is sent; the
+      lossy link drops it in flight), but each destination scales its
+      received contribution by the round's Bernoulli edge keep-mask and
+      folds the dropped weight back into its self weight.
+
+    The compressed CHOCO engine does NOT use this helper: integrating
+    sampled q's into the running aggregate s is unsound (s = sum_tau W_tau
+    q_tau is a non-decaying random walk around the static-W target — see
+    make_process_choco_fn for the replica-based algorithm that replaces it).
+    """
+    i = flat_idx_fn()
+    if process.kind == "matching":
+        rounds = process.schedule.rounds
+
+        def branch(r):
+            recv = jnp.asarray(process.branch_recv[r], jnp.float32)
+            selfw = jnp.asarray(process.branch_self[r], jnp.float32)
+            perm = list(rounds[r].perm)
+
+            def run(pl):
+                got = jax.lax.ppermute(pl, axis_arg, perm)
+                bufs = dense_fn(got)
+                wv = recv[i]
+                return [wv * b for b in bufs], selfw[i]
+            return run
+
+        idx = process.round_index(sample_key, t)
+        nbr_bufs, w_self = jax.lax.switch(
+            idx, [branch(r) for r in range(len(rounds))], payloads)
+        return nbr_bufs, 1.0, w_self
+
+    if process.kind == "linkfail":
+        mask = process.edge_mask(sample_key, t)
+        rmasks = process.round_masks(mask)
+        total, recv_w = None, jnp.float32(0.0)
+        for rnd, rm, recv in zip(process.schedule.rounds, rmasks,
+                                 process.round_recv):
+            got = jax.lax.ppermute(payloads, axis_arg, list(rnd.perm))
+            bufs = dense_fn(got)
+            wv = (jnp.asarray(recv, jnp.float32) * rm)[i]
+            contrib = [wv * b for b in bufs]
+            total = contrib if total is None else [a + c for a, c
+                                                   in zip(total, contrib)]
+            recv_w = recv_w + wv
+        return total, 1.0, 1.0 - recv_w
+
+    raise ValueError(f"unknown topology process kind {process.kind!r}")
+
+
 def _self_weight(schedule: GossipSchedule, flat_idx_fn):
     if schedule.self_weight is not None:
         return schedule.self_weight
@@ -376,30 +457,219 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
 
 
 # ---------------------------------------------------------------------------
+# stochastic-process choco engine (per-round references — Algorithm 2 style)
+# ---------------------------------------------------------------------------
+
+def _send_vec(perm, n) -> Tuple[float, ...]:
+    vec = [0.0] * n
+    for src, _ in perm:
+        vec[src] = 1.0
+    return tuple(vec)
+
+
+def make_process_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
+                          process, compressor: Compressor, gamma: float,
+                          gossip_steps: int = 1, packed: bool = True,
+                          pack_align: Optional[int] = None,
+                          leaf_routes: Optional[list] = None) -> Callable:
+    """Compressed gossip under a sampled/masked TopologyProcess.
+
+    The static engine's running aggregate s_i = sum_tau (W q_tau)_i is only
+    meaningful when W is FIXED: under per-step sampled W_t it becomes a
+    non-decaying random walk around the target sum_j w_ij x_hat_j and the
+    iterates drift away (unbiased but integrating variance).  The sound
+    algorithm is the source paper's Algorithm 2 itself — every consumer of a
+    public copy must hear every update of it — realized here with
+    *per-round references*, the minimal replica set for round-sampled
+    communication:
+
+      * own references H_r (one per schedule round the node sends in):
+        q_i^(r) = Q(x_i - H_r), H_r += q_i^(r), updated ONLY when round r
+        actually ships;
+      * source replicas S_r (one per round): S_r += received q — exact
+        copies of the round-r source's H_r, because that source updates its
+        H_r in exactly the rounds this node hears it (static round
+        structure + shared sampling seed = replica consistency with zero
+        metadata on the wire);
+      * update  x_i += gamma * sum_r live_r * v_r[i] * (S_r - H_r)  — the
+        Algorithm-1 row form with every term locally fresh.
+
+    matching: one round live per gossip round (``lax.switch`` — a single
+    permute launch and a single compression per step, against the sampled
+    round's reference).  linkfail: all rounds ship one shared q (single
+    compression, x_hat is the one own-reference) and the Bernoulli edge
+    mask gates each round's receive weight.
+
+    Memory: matching holds 2R state trees (R own refs + R replicas), and
+    linkfail R + 1 — the O(degree) public-copy cost of the paper's
+    Algorithm 2, which the static engine's Algorithm-5 s-trick avoids only
+    because its W never changes.  The trainer allocates x_hat / s as lists
+    of trees accordingly.
+    """
+    n = 1
+    for sz in sizes:
+        n *= sz
+    assert process.n == n, f"process n={process.n} != mesh extent {n}"
+    assert gossip_steps >= 1
+    axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
+    align = _pack_align(compressor, pack_align)
+    rounds = process.schedule.rounds
+    R = len(rounds)
+    send_vecs = [_send_vec(rnd.perm, n) for rnd in rounds]
+
+    def compress_stage(tkey, deltas, shapes_like):
+        """(payloads, q_leaves, dense_fn) — packed or per-leaf."""
+        if packed:
+            from repro.comm.packing import (bucket_dense, compress_packed,
+                                            make_bucket_spec, unpack_leaves)
+            spec = make_bucket_spec(shapes_like, align=align,
+                                    routes=leaf_routes)
+            payloads, q_leaves = compress_packed(compressor, tkey, spec,
+                                                 deltas)
+            dense_fn = lambda got: unpack_leaves(
+                spec, [bucket_dense(g, b) for g, b in zip(got, spec.buckets)])
+            return payloads, q_leaves, dense_fn
+        keys = _leaf_keys(tkey, len(deltas), 0)
+        payloads, dfns, q_leaves = [], [], []
+        for i, d in enumerate(deltas):
+            pl, dfn = _compress_leaf(
+                compressor, keys[i] if compressor.stochastic else None, d)
+            payloads.append(pl)
+            dfns.append(dfn)
+            q_leaves.append(dfn(pl))
+        return payloads, q_leaves, (
+            lambda got: [dfn(g) for dfn, g in zip(dfns, got)])
+
+    def matching_local_fn(key, x_half, hat_list, s_list):
+        sample_key = key
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        leaves_x, treedef = jax.tree_util.tree_flatten(x_half)
+        H = [treedef.flatten_up_to(h) for h in hat_list]   # R own refs
+        S = [treedef.flatten_up_to(sv) for sv in s_list]   # R replicas
+        flat_idx = _LazyFlatIndex(axes, sizes)
+        i = flat_idx()
+        for t in range(gossip_steps):
+            tkey = key if t == 0 else jax.random.fold_in(key, t)
+
+            def branch(r):
+                recv = jnp.asarray(process.branch_recv[r], jnp.float32)
+                send = jnp.asarray(send_vecs[r], jnp.float32)
+                perm = list(rounds[r].perm)
+
+                def run(ops):
+                    lx, Hs, Ss = ops
+                    ref = Hs[r]
+                    deltas = [(a.astype(h.dtype) - h).ravel()
+                              for a, h in zip(lx, ref)]
+                    payloads, q_leaves, dense_fn = compress_stage(
+                        jax.random.fold_in(tkey, r), deltas, ref)
+                    m_send = send[i]
+                    new_ref = [h + (m_send
+                                    * q.reshape(h.shape)).astype(h.dtype)
+                               for h, q in zip(ref, q_leaves)]
+                    got = jax.lax.ppermute(payloads, axis_arg, perm)
+                    recv_dense = dense_fn(got)
+                    # non-receivers get ppermute zeros: replica unchanged
+                    new_rep = [sv + rd.reshape(sv.shape).astype(sv.dtype)
+                               for sv, rd in zip(Ss[r], recv_dense)]
+                    v = recv[i]
+                    # cast the whole f32-weighted update back: v is a strong
+                    # f32 scalar and would silently upcast bf16 params
+                    new_x = [a + (gamma * v * (sr - hr)).astype(a.dtype)
+                             for a, sr, hr in zip(lx, new_rep, new_ref)]
+                    Hs2 = [new_ref if rr == r else Hs[rr] for rr in range(R)]
+                    Ss2 = [new_rep if rr == r else Ss[rr] for rr in range(R)]
+                    return new_x, Hs2, Ss2
+                return run
+
+            idx = process.round_index(sample_key, t)
+            leaves_x, H, S = jax.lax.switch(
+                idx, [branch(r) for r in range(R)], (leaves_x, H, S))
+        u = treedef.unflatten
+        return u(leaves_x), [u(h) for h in H], [u(sv) for sv in S]
+
+    def linkfail_local_fn(key, x_half, x_hat, s_list):
+        sample_key = key
+        for a in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(a))
+        leaves_x, treedef = jax.tree_util.tree_flatten(x_half)
+        leaves_hat = treedef.flatten_up_to(x_hat)
+        S = [treedef.flatten_up_to(sv) for sv in s_list]
+        flat_idx = _LazyFlatIndex(axes, sizes)
+        i = flat_idx()
+        for t in range(gossip_steps):
+            tkey = key if t == 0 else jax.random.fold_in(key, t)
+            deltas = [(a.astype(h.dtype) - h).ravel()
+                      for a, h in zip(leaves_x, leaves_hat)]
+            payloads, q_leaves, dense_fn = compress_stage(tkey, deltas,
+                                                          leaves_hat)
+            leaves_hat = [h + q.reshape(h.shape).astype(h.dtype)
+                          for h, q in zip(leaves_hat, q_leaves)]
+            mask = process.edge_mask(sample_key, t)
+            rmasks = process.round_masks(mask)
+            acc = [jnp.zeros((), a.dtype) for a in leaves_x]
+            new_S = []
+            for r, rnd in enumerate(rounds):
+                got = jax.lax.ppermute(payloads, axis_arg, list(rnd.perm))
+                recv_dense = dense_fn(got)
+                # the replica ALWAYS integrates (the payload was sent; the
+                # lossy link gates only the mixing weight below) — it must
+                # keep tracking the source's x_hat exactly
+                S_r = [sv + rd.reshape(sv.shape).astype(sv.dtype)
+                       for sv, rd in zip(S[r], recv_dense)]
+                new_S.append(S_r)
+                wv = (jnp.asarray(process.round_recv[r], jnp.float32)
+                      * rmasks[r])[i]
+                acc = [a + wv * (sr - h)
+                       for a, sr, h in zip(acc, S_r, leaves_hat)]
+            S = new_S
+            # acc is f32 (strong per-node mask weights): cast the whole
+            # update back so bf16 params stay bf16
+            leaves_x = [a + (gamma * ac).astype(a.dtype)
+                        for a, ac in zip(leaves_x, acc)]
+        u = treedef.unflatten
+        return u(leaves_x), u(leaves_hat), [u(sv) for sv in S]
+
+    if process.kind == "matching":
+        return matching_local_fn
+    if process.kind == "linkfail":
+        return linkfail_local_fn
+    raise ValueError(f"unknown topology process kind {process.kind!r}")
+
+
+# ---------------------------------------------------------------------------
 # exact baselines
 # ---------------------------------------------------------------------------
 
 def make_plain_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                            schedules: Tuple[GossipSchedule, ...],
-                           gossip_steps: int = 1) -> Callable:
+                           gossip_steps: int = 1,
+                           process=None) -> Callable:
     """Exact neighbour averaging (Algorithm 3): x = sum_j w_ij x_j, on any
     compiled schedule (the uncompressed iterates themselves are the wire
-    payload)."""
+    payload).  process != None averages with the sampled mixing matrix of a
+    comm/stochastic.py TopologyProcess instead of the static W."""
     compiled = [(sch, _weight_groups(sch)) for sch in schedules]
     axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
 
     def local_fn(key, x_half, x_hat, s):
-        del key
+        sample_key = key
         x = x_half
         flat_idx = _LazyFlatIndex(axes, sizes)
         for t in range(gossip_steps):
             sched, groups = compiled[t % len(compiled)]
-            if not groups:
+            if process is None and not groups:
                 continue
             leaves, treedef = jax.tree_util.tree_flatten(x)
-            nbr, w_nbr = _neighbor_sum(leaves, groups, axis_arg,
-                                       lambda got: got, flat_idx)
-            w_self = _self_weight(sched, flat_idx)
+            if process is not None:
+                nbr, w_nbr, w_self = _process_neighbor_sum(
+                    process, leaves, axis_arg, lambda got: got, flat_idx,
+                    sample_key, t)
+            else:
+                nbr, w_nbr = _neighbor_sum(leaves, groups, axis_arg,
+                                           lambda got: got, flat_idx)
+                w_self = _self_weight(sched, flat_idx)
             # cast back: per-node weights are f32 scalars and would upcast
             # bf16 params (uniform python-float weights make this a no-op)
             x = treedef.unflatten([(w_self * a + w_nbr * b).astype(a.dtype)
@@ -442,7 +712,9 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
                          packed: bool = True,
                          pack_align: Optional[int] = None,
                          schedules: Optional[Sequence[GossipSchedule]] = None,
-                         gossip_steps: int = 1) -> Callable:
+                         gossip_steps: int = 1,
+                         process=None,
+                         weight_specs=None) -> Callable:
     """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
 
     axis: one mesh axis name, or a tuple of axis names whose row-major
@@ -455,9 +727,59 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
     2-d torus on an axis pair, matching the pre-schedule engines.
     packed selects the bucketed flat-buffer engine (default) vs the legacy
     per-leaf exchange.
+    process: comm/stochastic.py TopologyProcess — replaces the static round
+    replay with per-step sampled rounds (choco / plain modes only); its
+    schedule IS the schedule, so ``schedules`` must be omitted or length 1.
+    mode="pushsum" builds the directed column-stochastic engine
+    (comm/pushsum.py): the returned callable has the 5-ary push-sum
+    signature (key, x, x_hat, s, w) -> (x, x_hat, s, w) and needs
+    ``weight_specs`` (PartitionSpec of the per-node weight scalar).
     """
     axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
     sizes = tuple(mesh.shape[a] for a in axes)
+    n = 1
+    for sz in sizes:
+        n *= sz
+    if process is not None:
+        if mode not in ("choco", "plain"):
+            raise ValueError(
+                f"topology processes run on the choco/plain engines only; "
+                f"mode={mode!r} (the push-sum engine handles directed graphs "
+                f"itself, allreduce has no gossip graph)")
+        if schedules is not None and len(tuple(schedules)) > 1:
+            raise ValueError(
+                "a topology process already IS the per-step mixing "
+                "distribution; combining it with a time-varying schedule "
+                "sequence is ambiguous — pass one or the other")
+        if process.n != n:
+            raise ValueError(f"process n={process.n} != mesh gossip "
+                             f"extent {n}")
+        schedules = (process.schedule,)
+
+    if mode == "pushsum":
+        from repro.comm.pushsum import make_pushsum_schedule_fn
+        if not packed:
+            raise ValueError("the push-sum engine is packed-only (the weight "
+                             "scalar rides in-band with the bucket payloads); "
+                             "per-leaf push-sum is not implemented")
+        if schedules is None or len(tuple(schedules)) != 1:
+            raise ValueError("push-sum needs exactly one compiled directed "
+                             "schedule (compile_directed_schedule)")
+        if weight_specs is None:
+            raise ValueError("push-sum needs weight_specs: the PartitionSpec "
+                             "of the per-node (n, 1) weight column")
+        local_fn = make_pushsum_schedule_fn(
+            axes=axes, sizes=sizes, schedule=tuple(schedules)[0],
+            compressor=compressor, gamma=gamma, gossip_steps=gossip_steps,
+            pack_align=pack_align,
+            leaf_routes=_leaf_routes(state_specs, axes))
+        return shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(), state_specs, state_specs, state_specs,
+                      weight_specs),
+            out_specs=(state_specs, state_specs, state_specs, weight_specs),
+        )
+
     schedules = (tuple(schedules) if schedules
                  else _default_schedules(axes, sizes))
     if len(schedules) > 1 and gossip_steps % len(schedules) != 0:
@@ -468,6 +790,25 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             f"time-varying mixing with {len(schedules)} schedules needs "
             f"gossip_steps to be a multiple of the sequence length so every "
             f"schedule runs each SGD step; got gossip_steps={gossip_steps}")
+
+    if mode == "choco" and process is not None:
+        # replica-based engine: x_hat / s are LISTS of state trees (per-round
+        # references — see make_process_choco_fn); their specs replicate the
+        # single-tree specs element-wise
+        local_fn = make_process_choco_fn(
+            axes=axes, sizes=sizes, process=process, compressor=compressor,
+            gamma=gamma, gossip_steps=gossip_steps, packed=packed,
+            pack_align=pack_align,
+            leaf_routes=_leaf_routes(state_specs, axes))
+        R = len(process.schedule.rounds)
+        hat_specs = (state_specs if process.kind == "linkfail"
+                     else [state_specs] * R)
+        s_specs = [state_specs] * R
+        return shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(), state_specs, hat_specs, s_specs),
+            out_specs=(state_specs, hat_specs, s_specs),
+        )
 
     if mode == "choco":
         local_fn = make_choco_schedule_fn(
@@ -480,7 +821,8 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
     elif mode == "plain":
         local_fn = make_plain_schedule_fn(axes=axes, sizes=sizes,
                                           schedules=schedules,
-                                          gossip_steps=gossip_steps)
+                                          gossip_steps=gossip_steps,
+                                          process=process)
     elif mode == "allreduce":
         local_fn = make_allreduce_fn(axes=axes)
     else:

@@ -44,7 +44,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.topology import Topology, _square_factors
+from repro.core.topology import DirectedTopology, Topology, _square_factors
 
 #: entries of W below this are treated as structural zeros (no edge)
 _EDGE_TOL = 1e-12
@@ -84,10 +84,21 @@ class GossipSchedule:
         """Reconstruct W from the rounds (used to validate compilation)."""
         W = np.diag(np.asarray(self.self_weights, dtype=np.float64))
         for rnd in self.rounds:
+            recv = round_recv_vec(rnd, self.n)
             for src, dst in rnd.perm:
-                w = rnd.weight if rnd.weight is not None else rnd.weights[dst]
-                W[dst, src] += w
+                W[dst, src] += recv[dst]
         return W
+
+
+def round_recv_vec(rnd: GossipRound, n: int) -> np.ndarray:
+    """Per-destination receive weight of one round as an (n,) vector (0 for
+    nodes the round's partial permutation skips) — the single extraction of
+    the weight-vs-weights round encoding, shared by the stochastic process
+    samplers and the push-sum engine."""
+    vec = np.zeros(n, dtype=np.float64)
+    for src, dst in rnd.perm:
+        vec[dst] = rnd.weight if rnd.weight is not None else rnd.weights[dst]
+    return vec
 
 
 def _uniform(values) -> Optional[float]:
@@ -204,6 +215,57 @@ def _edge_coloring_rounds(W: np.ndarray) -> list:
     return rounds
 
 
+def _directed_coloring_rounds(A: np.ndarray) -> list:
+    """Greedy bipartite edge coloring of a DIRECTED support: each directed
+    edge (src -> dst) gets a color unused by src as a sender and by dst as a
+    receiver, so every color class is a partial permutation (distinct
+    sources, distinct destinations) — one ``lax.ppermute``.  By König's
+    theorem an optimal coloring needs max(out_deg, in_deg) colors; greedy
+    needs at most out_deg + in_deg - 1."""
+    n = A.shape[0]
+    edges = [(j, i) for j in range(n) for i in range(n)
+             if i != j and abs(A[i, j]) > _EDGE_TOL]
+    colors: list = []
+    used_src = [set() for _ in range(n)]
+    used_dst = [set() for _ in range(n)]
+    for src, dst in edges:
+        c = 0
+        while c in used_src[src] or c in used_dst[dst]:
+            c += 1
+        while len(colors) <= c:
+            colors.append([])
+        colors[c].append((src, dst))
+        used_src[src].add(c)
+        used_dst[dst].add(c)
+    rounds = []
+    for cls in colors:
+        perm = tuple(cls)
+        weights = {dst: A[dst, src] for src, dst in cls}
+        rounds.append(_make_round(perm, weights, n))
+    return rounds
+
+
+def compile_directed_schedule(topo: DirectedTopology) -> GossipSchedule:
+    """Compile a column-stochastic directed A into permutation rounds via
+    bipartite edge coloring (König): same GossipSchedule contract as the
+    symmetric compiler — A = diag(self_weights) + sum_r weight_r * P_r —
+    consumed by the push-sum engine (comm/pushsum.py), never by the
+    symmetric CHOCO engines (their row-stochastic averaging diverges on a
+    column-stochastic A)."""
+    A = np.asarray(topo.A, dtype=np.float64)
+    n = A.shape[0]
+    rounds = _directed_coloring_rounds(A)
+    diag = tuple(float(A[i, i]) for i in range(n))
+    sched = GossipSchedule(name=topo.name, n=n, rounds=tuple(rounds),
+                           self_weights=diag, self_weight=_uniform(diag))
+    err = float(np.max(np.abs(sched.mixing_matrix() - A))) if n else 0.0
+    if err > 1e-9:
+        raise AssertionError(
+            f"directed schedule compilation failed for {topo.name!r} "
+            f"(n={n}): reconstruction error {err}")
+    return sched
+
+
 # ---------------------------------------------------------------------------
 # compiler
 # ---------------------------------------------------------------------------
@@ -223,7 +285,11 @@ def compile_schedule(topo: Topology,
     W = np.asarray(topo.W, dtype=np.float64)
     n = W.shape[0]
     if not np.allclose(W, W.T, atol=1e-10):
-        raise ValueError("schedule compiler requires a symmetric W")
+        raise ValueError(
+            "schedule compiler requires a symmetric W; a directed "
+            "(column-stochastic) mixing matrix must go through "
+            "compile_directed_schedule + the push-sum engine "
+            "(comm/pushsum.py)")
 
     builders = {
         "ring": lambda: _ring_rounds(W),

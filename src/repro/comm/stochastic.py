@@ -1,0 +1,399 @@
+"""Stochastic topology processes: per-step distributions over mixing matrices.
+
+PR 2's schedule compiler turned a *fixed* Topology into a static round
+decomposition.  Real deployments see time-varying and unreliable links, and
+the theory tolerates them: Koloskova et al. (2020) show CHOCO-style error
+feedback converges under stochastic mixing as long as the *expected* W mixes.
+This module generalizes the static ``Topology -> GossipSchedule`` pipeline to
+a :class:`TopologyProcess` — a per-step distribution over mixing matrices
+with three consumers:
+
+  * the distributed gossip engines (``comm/gossip.py``) — every CHOCO / plain
+    exchange accepts a process and replays its *sampled* rounds instead of
+    the full static schedule;
+  * the matrix simulator (``sample_matrix``) — the (n, n) mixing matrix of a
+    given (key, t), used for parity tests and benchmarks;
+  * the trainer — ``expected_matrix`` / ``expected_delta_beta`` feed the
+    Theorem-2 stepsize with the *expected*-W eigengap.
+
+Two process families:
+
+  * :class:`MatchingProcess` — each step samples ONE round of the compiled
+    schedule (uniform or weighted by round mass), with the round's receive
+    weights scaled by 1/p_r so the expected mixing matrix equals the static
+    W **exactly**.  Per-step wire cost drops from ``n_rounds`` permute
+    launches to one (``lax.switch`` over single-round branches).
+  * :class:`LinkFailureProcess` — i.i.d. Bernoulli edge drops on any
+    compiled schedule; a dropped edge's weight is folded back into both
+    endpoints' self weight, so every sampled W stays row-stochastic,
+    symmetric, and nonnegative.  E[W_t] = (1 - p) W + p I, and the trainer
+    re-derives gamma from that expected matrix's eigengap.
+
+A note on the compressed engine: CHOCO's memory-efficient aggregate
+s_i = sum_tau (W q_tau)_i is an identity that holds only for a FIXED W —
+under per-step sampled W_t it integrates sampling noise without decay and
+the iterates drift (verified empirically; the information is simply never
+on the wire).  The distributed engine therefore runs the source paper's
+Algorithm-2 form with *per-round reference replicas*
+(comm/gossip.py ``make_process_choco_fn``), whose matrix twin is
+:func:`choco_process_round` here.  The plain engine needs no replicas: its
+payload is the fresh iterate, so sampled mixing is exact as-is.
+
+Determinism contract (the "no communication" seed plumbing): every sample is
+a pure function of the *pre-axis-fold* exchange key and the in-step round
+index t, via ``jax.random.fold_in(key, SAMPLE_SALT + t)``.  The trainer
+already passes ``fold_in(state.key, state.step)`` as the exchange key, so all
+nodes — and all engines (packed / per-leaf / plain) and the simulator — draw
+the identical round from the same seed without exchanging a single byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.schedule import (GossipRound, GossipSchedule,
+                                 compile_schedule, round_recv_vec)
+from repro.core.topology import Topology, beta_norm, spectral_gap
+
+#: fold_in salt separating topology sampling from compressor randomness
+#: (which folds per-axis node ids and per-leaf salts on the same key)
+SAMPLE_SALT = 0x70C0
+
+_MATCHING_SAMPLERS = ("uniform", "weighted")
+
+
+def _round_matrix(rnd: GossipRound, n: int,
+                  scale: float = 1.0) -> np.ndarray:
+    """Off-diagonal contribution of one round, scaled."""
+    M = np.zeros((n, n), dtype=np.float64)
+    for src, dst in rnd.perm:
+        w = rnd.weight if rnd.weight is not None else rnd.weights[dst]
+        M[dst, src] += w * scale
+    return M
+
+
+class TopologyProcess:
+    """Base: a per-step distribution over n x n mixing matrices.
+
+    Subclasses provide ``sample_matrix(key, t)`` (traced, for the simulator)
+    plus the static descriptors the distributed engines replay; the shared
+    ``_sample_key`` fold is THE determinism contract — engine and simulator
+    must derive every random draw from it identically."""
+
+    kind: str = "abstract"
+    schedule: GossipSchedule
+
+    @property
+    def n(self) -> int:
+        return self.schedule.n
+
+    @staticmethod
+    def _sample_key(key: jax.Array, t: int) -> jax.Array:
+        return jax.random.fold_in(key, SAMPLE_SALT + t)
+
+    def sample_matrix(self, key: jax.Array, t: int) -> jax.Array:
+        raise NotImplementedError
+
+    def expected_matrix(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def expected_delta_beta(self) -> Tuple[float, float]:
+        """(delta, beta) of the EXPECTED mixing matrix — what the Theorem-2
+        consensus stepsize should be computed from under stochastic mixing
+        (Koloskova et al. 2020 analyze exactly this quantity)."""
+        E = self.expected_matrix()
+        return spectral_gap(E), beta_norm(E)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MatchingProcess(TopologyProcess):
+    """Randomized matchings: sample one edge-colored round per gossip round.
+
+    Round r of the compiled schedule is drawn with probability ``probs[r]``
+    and its receive weights are scaled by ``1 / probs[r]``; everything the
+    node does not receive goes to its self weight.  The sampled matrix is
+    therefore row-stochastic and (for symmetric schedules) symmetric, and
+
+        E[W_t] = sum_r p_r (I - diag(v_r / p_r) + M_r / p_r) = W   exactly,
+
+    because the rounds partition W's off-diagonal mass.  Samplers:
+
+      * ``uniform``  — p_r = 1/R;
+      * ``weighted`` — p_r proportional to the round's maximum receive
+        weight, which minimizes the worst-case per-round upscale and keeps
+        heavier rounds (that carry more of W's mass) sampled more often.
+
+    Feasibility (scaled weights must stay <= 1 so self weights stay >= 0) is
+    checked at build time — an infeasible sampler raises with the binding
+    round rather than silently producing a non-stochastic W.
+    """
+    schedule: GossipSchedule
+    sampler: str = "uniform"
+
+    def __post_init__(self):
+        if self.sampler not in _MATCHING_SAMPLERS:
+            raise ValueError(f"unknown matching sampler {self.sampler!r}; "
+                             f"have {_MATCHING_SAMPLERS}")
+        R = self.schedule.n_rounds
+        if R == 0:
+            raise ValueError("matching process needs a schedule with at "
+                             "least one round (n >= 2)")
+        n = self.schedule.n
+        recv = np.stack([round_recv_vec(r, n) for r in self.schedule.rounds])
+        if self.sampler == "uniform":
+            probs = np.full(R, 1.0 / R)
+        else:
+            mass = recv.max(axis=1)
+            probs = mass / mass.sum()
+        scaled = recv / probs[:, None]
+        worst = float(scaled.max())
+        if worst > 1.0 + 1e-9:
+            r_bad = int(np.unravel_index(np.argmax(scaled), scaled.shape)[0])
+            raise ValueError(
+                f"matching sampler {self.sampler!r} infeasible for "
+                f"{self.schedule.name!r}: round {r_bad} scales a receive "
+                f"weight to {worst:.3f} > 1 (self weight would go negative); "
+                f"try sampler='weighted' or a topology with fewer rounds")
+        object.__setattr__(self, "probs", tuple(float(p) for p in probs))
+        # per-branch scaled receive vectors and self weights (1 - received)
+        object.__setattr__(self, "branch_recv",
+                           tuple(tuple(row) for row in scaled))
+        object.__setattr__(self, "branch_self",
+                           tuple(tuple(1.0 - row) for row in scaled))
+        # per-round data movement, for the simulator twin of the replica
+        # engine: source node per destination (self when not receiving) and
+        # the sender indicator
+        srcs, sends = [], []
+        for rnd in self.schedule.rounds:
+            sv = np.arange(n)
+            mv = np.zeros(n)
+            for src, dst in rnd.perm:
+                sv[dst] = src
+                mv[src] = 1.0
+            srcs.append(tuple(int(v) for v in sv))
+            sends.append(tuple(mv))
+        object.__setattr__(self, "round_src", tuple(srcs))
+        object.__setattr__(self, "round_send", tuple(sends))
+
+    kind = "matching"
+
+    @property
+    def n_rounds(self) -> int:
+        return self.schedule.n_rounds
+
+    def round_index(self, key: jax.Array, t: int) -> jax.Array:
+        """Sampled round id for gossip round t — identical on every node
+        (pure function of the shared exchange key).  Inverse-CDF over the
+        static cumulative probs (jax.random.choice's searchsorted lowers to
+        a scan that shard_map's replication checker rejects)."""
+        k = self._sample_key(key, t)
+        u = jax.random.uniform(k)
+        cum = np.cumsum(np.asarray(self.probs))[:-1]
+        return jnp.sum(u >= jnp.asarray(cum, jnp.float32)).astype(jnp.int32)
+
+    def branch_matrices(self) -> np.ndarray:
+        """(R, n, n) stack of the per-branch sampled mixing matrices."""
+        n = self.n
+        mats = []
+        for r, rnd in enumerate(self.schedule.rounds):
+            M = _round_matrix(rnd, n, scale=1.0 / self.probs[r])
+            mats.append(np.diag(np.asarray(self.branch_self[r])) + M)
+        return np.stack(mats)
+
+    def sample_matrix(self, key: jax.Array, t: int) -> jax.Array:
+        return jnp.asarray(self.branch_matrices())[self.round_index(key, t)]
+
+    def expected_matrix(self) -> np.ndarray:
+        return np.einsum("r,rij->ij", np.asarray(self.probs),
+                         self.branch_matrices())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LinkFailureProcess(TopologyProcess):
+    """I.i.d. Bernoulli link failures over a compiled schedule.
+
+    Each undirected edge {i, j} of the schedule's support drops with
+    probability ``drop_prob``, independently per gossip round; both
+    directions drop together (the physical link is down), and each
+    endpoint's lost receive weight is folded back into its self weight:
+
+        W_t = diag(W) + M_t . (W - diag(W)) + diag((1 - M_t) row-mass)
+
+    which keeps every sample row-stochastic, symmetric, and nonnegative.
+    E[W_t] = (1 - p) W + p I, so the expected eigengap is (1 - p) delta —
+    ``expected_delta_beta`` hands the trainer exactly that for gamma.
+    """
+    schedule: GossipSchedule
+    drop_prob: float = 0.1
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_prob < 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1), got "
+                             f"{self.drop_prob} (p = 1 never mixes)")
+        n = self.schedule.n
+        edges = {}                      # canonical {i, j} -> edge id
+        round_edge_ids = []             # per round: (n,) dst -> edge id | -1
+        round_recv = []                 # per round: (n,) receive weights
+        for rnd in self.schedule.rounds:
+            ids = np.full(n, -1, dtype=np.int32)
+            for src, dst in rnd.perm:
+                e = (min(src, dst), max(src, dst))
+                if e not in edges:
+                    edges[e] = len(edges)
+                ids[dst] = edges[e]
+            round_edge_ids.append(ids)
+            round_recv.append(round_recv_vec(rnd, n))
+        object.__setattr__(self, "n_edges", len(edges))
+        object.__setattr__(self, "_edges", tuple(sorted(edges, key=edges.get)))
+        object.__setattr__(self, "round_edge_ids",
+                           tuple(tuple(int(v) for v in ids)
+                                 for ids in round_edge_ids))
+        object.__setattr__(self, "round_recv",
+                           tuple(tuple(row) for row in round_recv))
+
+    kind = "linkfail"
+
+    def edge_mask(self, key: jax.Array, t: int) -> jax.Array:
+        """(n_edges,) float32 keep-mask (1 = link up) for gossip round t —
+        same on every node, drawn from the shared exchange key."""
+        k = self._sample_key(key, t)
+        keep = jax.random.bernoulli(k, 1.0 - self.drop_prob,
+                                    (max(self.n_edges, 1),))
+        return keep.astype(jnp.float32)
+
+    def round_masks(self, mask: jax.Array):
+        """Per-round (n,) per-destination keep values from the edge mask."""
+        out = []
+        for ids in self.round_edge_ids:
+            idx = jnp.asarray(ids)
+            out.append(jnp.where(idx >= 0, mask[jnp.clip(idx, 0)], 0.0))
+        return out
+
+    def sample_matrix(self, key: jax.Array, t: int) -> jax.Array:
+        n = self.n
+        mask = self.edge_mask(key, t)
+        rmasks = self.round_masks(mask)
+        W = jnp.zeros((n, n))
+        recv_total = jnp.zeros(n)
+        for rnd, rm, recv in zip(self.schedule.rounds, rmasks,
+                                 self.round_recv):
+            M = jnp.zeros((n, n))
+            for src, dst in rnd.perm:
+                w = (rnd.weight if rnd.weight is not None
+                     else rnd.weights[dst])
+                M = M.at[dst, src].add(w * rm[dst])
+            W = W + M
+            recv_total = recv_total + jnp.asarray(recv) * rm
+        return W + jnp.diag(1.0 - recv_total)
+
+    def expected_matrix(self) -> np.ndarray:
+        W = np.asarray(self.schedule.mixing_matrix())
+        p = self.drop_prob
+        return (1.0 - p) * W + p * np.eye(self.n)
+
+
+# ---------------------------------------------------------------------------
+# builders + matrix simulators
+# ---------------------------------------------------------------------------
+
+def make_topology_process(kind: str, schedule: GossipSchedule, *,
+                          matching_sampler: str = "uniform",
+                          edge_drop_prob: float = 0.1) -> TopologyProcess:
+    """Named-process registry mirrored by the ``--topology-process`` CLI."""
+    if kind == "matching":
+        return MatchingProcess(schedule, sampler=matching_sampler)
+    if kind == "linkfail":
+        return LinkFailureProcess(schedule, drop_prob=edge_drop_prob)
+    raise ValueError(f"unknown topology process {kind!r}; "
+                     f"have ('matching', 'linkfail')")
+
+
+def process_from_topology(kind: str, topo: Topology, **kw) -> TopologyProcess:
+    return make_topology_process(kind, compile_schedule(topo), **kw)
+
+
+class ProcessGossipState:
+    """Matrix-simulator state for the replica-based process engine
+    (comm/gossip.py make_process_choco_fn).
+
+    x: (n, d) iterates.  refs: matching — (R, n, d) per-round own references
+    H_r (the global view IS the replica set: node i's round-r source replica
+    equals row src_r(i) of H_r); linkfail — (n, d) single public copy x_hat
+    (replicas are exact because every round always ships)."""
+
+    def __init__(self, x: jax.Array, refs: jax.Array):
+        self.x = x
+        self.refs = refs
+
+
+def init_process_state(x0: jax.Array,
+                       process: TopologyProcess) -> ProcessGossipState:
+    if process.kind == "matching":
+        R = process.schedule.n_rounds
+        refs = jnp.zeros((R,) + x0.shape, x0.dtype)
+    else:
+        refs = jnp.zeros_like(x0)
+    return ProcessGossipState(x0, refs)
+
+
+def choco_process_round(state: ProcessGossipState, process: TopologyProcess,
+                        gamma: float, compressor, key: jax.Array, t: int = 0,
+                        comp_key: Optional[jax.Array] = None
+                        ) -> ProcessGossipState:
+    """One round of the SOUND process algorithm — the matrix twin of
+    ``make_process_choco_fn`` (see its docstring for why the static engine's
+    s-aggregate cannot be reused under sampled W).  ``key`` is the EXCHANGE
+    key (pre-axis-fold); engine parity requires driving both with the same
+    key sequence and a deterministic compressor.
+
+    matching:  r ~ probs;  q = Q(x - H_r);  H_r += send_r . q;
+               x += gamma * v_r . (H_r[src_r] - H_r)
+    linkfail:  q = Q(x - x_hat);  x_hat += q;  m ~ Bernoulli edge mask;
+               x += gamma * (W_m - I) x_hat      (fresh public copies)
+    """
+    from repro.core.choco_gossip import _rowwise_compress
+    x = state.x
+    if process.kind == "matching":
+        H = state.refs
+        idx = process.round_index(key, t)
+        q = _rowwise_compress(compressor, comp_key,
+                              x - H[idx])
+        send = jnp.asarray(process.round_send)[idx][:, None]
+        Hr = H[idx] + send * q
+        H = H.at[idx].set(Hr)
+        src = jnp.asarray(process.round_src)[idx]
+        v = jnp.asarray(process.branch_recv)[idx][:, None]
+        x = x + gamma * v * (Hr[src, :] - Hr)
+        return ProcessGossipState(x, H)
+    if process.kind == "linkfail":
+        x_hat = state.refs
+        q = _rowwise_compress(compressor, comp_key, x - x_hat)
+        x_hat = x_hat + q
+        W = process.sample_matrix(key, t)
+        x = x + gamma * (W - jnp.eye(process.n)) @ x_hat
+        return ProcessGossipState(x, x_hat)
+    raise ValueError(process.kind)
+
+
+def run_choco_gossip_process(x0: jax.Array, process: TopologyProcess,
+                             gamma: float, compressor, steps: int,
+                             key: Optional[jax.Array] = None):
+    """Run `steps` single-round exchanges under the process, mirroring the
+    trainer's seed plumbing (exchange key = fold_in(key, step)).  Returns
+    (final ProcessGossipState, per-step consensus errors)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+    st = init_process_state(x0, process)
+    errs = []
+    for step in range(steps):
+        ek = jax.random.fold_in(key, step)
+        ck = jax.random.fold_in(ek, 1) if compressor.stochastic else None
+        st = choco_process_round(st, process, gamma, compressor, ek,
+                                 t=0, comp_key=ck)
+        errs.append(jnp.mean(jnp.sum((st.x - xbar) ** 2, axis=-1)))
+    return st, jnp.stack(errs)

@@ -215,6 +215,15 @@ class ChocoConfig:
     # segment alignment inside compressed buckets; None = the compressor's
     # block width (block_top_k) or the 128-lane unit
     pack_align: Optional[int] = None
+    # stochastic topology process (comm/stochastic.py): None = static
+    # schedule replay; "matching" samples one compiled round per gossip
+    # round (one permute launch/step, replica-based engine); "linkfail"
+    # drops each edge i.i.d. with edge_drop_prob per round (weights
+    # renormalized into the diagonal).  Theorem-2 gamma is re-derived from
+    # the EXPECTED mixing matrix's eigengap.
+    topology_process: Optional[str] = None
+    edge_drop_prob: float = 0.1          # linkfail Bernoulli drop probability
+    matching_sampler: str = "uniform"    # matching round sampler: uniform|weighted
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

@@ -4,13 +4,18 @@ from .compression import (Compressor, Identity, RandK, TopK, BlockTopK, QSGD,
                           SignNorm, RandomizedGossip, make_compressor,
                           SparsePayload, QuantPayload, DensePayload,
                           PackedSparsePayload, PackedQuantPayload)
-from .topology import (Topology, ring, torus2d, fully_connected, chain, star,
-                       hypercube, make_topology)
+from .topology import (Topology, DirectedTopology, ring, torus2d,
+                       fully_connected, chain, star, hypercube,
+                       directed_ring, random_digraph, make_topology,
+                       is_directed, spectral_gap, beta_norm)
 from .choco_gossip import (GossipState, EfficientGossipState, init_state,
                            choco_gossip_round, run_choco_gossip,
                            choco_gossip_round_efficient,
                            run_choco_gossip_efficient,
-                           theorem2_stepsize, theorem2_rate, auto_stepsize)
+                           theorem2_stepsize, theorem2_rate, auto_stepsize,
+                           PushSumState, init_pushsum_state,
+                           pushsum_gossip_round, pushsum_debias,
+                           run_pushsum_gossip)
 from .choco_sgd import (ChocoSGDState, choco_sgd_step, run_choco_sgd,
                         experiment_lr_schedule, theorem4_lr_schedule,
                         theorem4_a, auto_gamma)
@@ -18,4 +23,5 @@ from .baselines import (exact_gossip_round, q1_gossip_round, q2_gossip_round,
                         run_gossip_baseline, plain_dsgd_step, DCDState,
                         dcd_sgd_step, ECDState, ecd_sgd_step,
                         centralized_sgd_step)
-from .consensus import AveragingScheme, exact_averaging, choco_averaging
+from .consensus import (AveragingScheme, exact_averaging, choco_averaging,
+                        stochastic_choco_averaging)

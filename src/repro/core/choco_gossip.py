@@ -145,3 +145,66 @@ def run_choco_gossip_efficient(x0: jax.Array, W: jax.Array, gamma: float,
 def auto_stepsize(topo: Topology, compressor: Compressor, d: int) -> float:
     """Theorem-2 stepsize from a topology + compressor (conservative)."""
     return theorem2_stepsize(topo.delta, topo.beta, compressor.omega(d))
+
+
+# ---------------------------------------------------------------------------
+# Directed push-sum (column-stochastic A) — matrix simulator twin of
+# comm/pushsum.py.  Neither x nor the weight w converges alone; the
+# de-biased ratio z = x / w does, because 1^T A = 1^T conserves both sums.
+# ---------------------------------------------------------------------------
+
+class PushSumState(NamedTuple):
+    x: jax.Array        # (n, d) biased iterates
+    x_hat: jax.Array    # (n, d) public copies (compression error feedback)
+    s: jax.Array        # (n, d) A-weighted aggregate of the q's
+    w: jax.Array        # (n, 1) push-sum weights, init 1
+
+
+def init_pushsum_state(x0: jax.Array) -> PushSumState:
+    return PushSumState(x=x0, x_hat=jnp.zeros_like(x0),
+                        s=jnp.zeros_like(x0),
+                        w=jnp.ones((x0.shape[0], 1), x0.dtype))
+
+
+def pushsum_gossip_round(state: PushSumState, A: jax.Array, gamma: float,
+                         compressor: Compressor,
+                         key: Optional[jax.Array] = None) -> PushSumState:
+    """One compressed push-sum round:
+
+        q = Q(x - x_hat);  x_hat += q;  s += A q;  x += gamma (s - x_hat)
+        w += gamma (A w - w)                       (exact: scalars ship raw)
+
+    With Q = identity this collapses to lazy push-sum
+    x' = ((1-gamma) I + gamma A) x.  ``A @ q`` stands in for the directed
+    partial-permutation rounds of comm/pushsum.py."""
+    q = _rowwise_compress(compressor, key, state.x - state.x_hat)
+    x_hat = state.x_hat + q
+    s = state.s + A @ q
+    x = state.x + gamma * (s - x_hat)
+    w = state.w + gamma * (A @ state.w - state.w)
+    return PushSumState(x=x, x_hat=x_hat, s=s, w=w)
+
+
+def pushsum_debias(state: PushSumState) -> jax.Array:
+    """z = x / w — the quantity that converges to the initial average."""
+    return state.x / state.w
+
+
+@partial(jax.jit, static_argnames=("compressor", "steps"))
+def run_pushsum_gossip(x0: jax.Array, A: jax.Array, gamma: float,
+                       compressor: Compressor, steps: int,
+                       key: Optional[jax.Array] = None):
+    """Run `steps` rounds; returns (final_state, per-step consensus errors
+    of the DE-BIASED estimate x/w against the true initial average)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+
+    def body(state, k):
+        new = pushsum_gossip_round(state, A, gamma, compressor, k)
+        err = jnp.mean(jnp.sum((pushsum_debias(new) - xbar) ** 2, axis=-1))
+        return new, err
+
+    keys = jax.random.split(key, steps)
+    final, errs = jax.lax.scan(body, init_pushsum_state(x0), keys)
+    return final, errs

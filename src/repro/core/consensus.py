@@ -53,3 +53,38 @@ def choco_averaging(W: jax.Array, delta: float, beta: float,
         return Xn, Yn
 
     return AveragingScheme("choco", h, p=1.0 - theorem2_rate(delta, omega))
+
+
+def stochastic_choco_averaging(process, compressor: Compressor, d: int,
+                               gamma: Optional[float] = None) -> AveragingScheme:
+    """Blackbox averaging over a stochastic topology process
+    (comm/stochastic.py): h's auxiliary Y is the process's reference state —
+    the (R, n, d) per-round reference stack for matchings, the (n, d) public
+    copy for link failures — and each call consumes one sampled round.  The
+    contraction parameter comes from Theorem 2 evaluated at the EXPECTED
+    mixing matrix (Koloskova et al. 2020); ``key`` doubles as the sampling
+    seed, so a keyed driver is deterministic and engine-reproducible.
+
+    Directed push-sum deliberately has NO AveragingScheme: Algorithm 4's
+    blackbox contract requires h to preserve the node AVERAGE of X, but the
+    push-sum iterate only preserves the x-SUM while its ratio x/w converges
+    — it composes with SGD through the dedicated trainer mode instead.
+    """
+    from repro.comm.stochastic import choco_process_round, ProcessGossipState
+    delta, beta = process.expected_delta_beta()
+    omega = compressor.omega(d)
+    if gamma is None:
+        gamma = theorem2_stepsize(delta, beta, omega)
+
+    def h(X, Y, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        # same split as run_choco_gossip_process: the exchange key seeds the
+        # topology sample, a fold seeds the compressor's randomness
+        ck = (jax.random.fold_in(key, 1) if compressor.stochastic else None)
+        st = choco_process_round(ProcessGossipState(X, Y), process, gamma,
+                                 compressor, key, comp_key=ck)
+        return st.x, st.refs
+
+    return AveragingScheme(f"stochastic-{process.kind}", h,
+                           p=1.0 - theorem2_rate(delta, omega))

@@ -4,6 +4,13 @@ W must be symmetric, doubly stochastic, with spectral gap
 delta = 1 - |lambda_2(W)| in (0, 1].  We build the paper's uniform-averaging
 matrices (w_ij = 1/(deg+1) for regular graphs, Metropolis-Hastings otherwise)
 and expose delta, rho = 1 - delta, beta = ||I - W||_2.
+
+Directed graphs (Toghani & Uribe 2022; Assran et al. 2019) drop the symmetry
+requirement: :class:`DirectedTopology` carries a *column*-stochastic A
+(columns sum to 1, so 1^T A = 1^T and the node SUM is conserved — the
+invariant push-sum de-biasing relies on).  Directed mixing cannot run through
+the symmetric CHOCO engines; it needs the push-sum engine
+(``comm/pushsum.py``), which ships the (x, w) weight pair and de-biases x/w.
 """
 from __future__ import annotations
 
@@ -44,6 +51,95 @@ class Topology:
         assert np.allclose(W.sum(0), 1.0, atol=atol), "W not doubly stochastic"
         assert np.all(W >= -atol), "W has negative entries"
         return self
+
+
+def spectral_gap(W: np.ndarray) -> float:
+    """delta = 1 - |lambda_2| for an arbitrary (possibly non-symmetric)
+    stochastic matrix — the analysis knob for *expected* mixing matrices of
+    stochastic topology processes (comm/stochastic.py) and for directed A."""
+    eig = np.sort(np.abs(np.linalg.eigvals(np.asarray(W, np.float64))))[::-1]
+    return float(1.0 - (eig[1] if len(eig) > 1 else 0.0))
+
+
+def beta_norm(W: np.ndarray) -> float:
+    """beta = ||I - W||_2 (paper Theorem 2's second spectral quantity)."""
+    n = W.shape[0]
+    return float(np.linalg.norm(np.eye(n) - np.asarray(W, np.float64), ord=2))
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectedTopology:
+    """Column-stochastic mixing over a directed graph.
+
+    ``A[i, j]`` is the weight node j *pushes* to node i (j's column splits
+    j's mass over its out-neighbours and itself), so columns sum to 1 and
+    the total mass 1^T x is conserved — rows generally do NOT sum to 1,
+    which is exactly why plain/CHOCO averaging diverges on these graphs and
+    the push-sum (x, w) de-biasing is required."""
+    name: str
+    A: np.ndarray                              # (n, n) column-stochastic
+    out_neighbors: Tuple[Tuple[int, ...], ...]  # per column, incl. self
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def directed(self) -> bool:
+        return True
+
+    @property
+    def delta(self) -> float:
+        """1 - |lambda_2(A)| — governs the push-sum consensus rate."""
+        return spectral_gap(self.A)
+
+    @property
+    def beta(self) -> float:
+        return beta_norm(self.A)
+
+    def validate(self, atol=1e-10):
+        A = self.A
+        assert np.allclose(A.sum(0), 1.0, atol=atol), "A not column-stochastic"
+        assert np.all(A >= -atol), "A has negative entries"
+        assert np.all(np.diag(A) > atol), "push-sum needs self-loops (A_jj > 0)"
+        return self
+
+
+def directed_ring(n: int) -> DirectedTopology:
+    """Directed cycle: every node pushes half its mass to its successor.
+    A = (I + P) / 2 with P the cyclic shift — column- AND row-stochastic,
+    but not symmetric, so it still requires push-sum."""
+    if n == 1:
+        return DirectedTopology("directed_ring", np.ones((1, 1)), ((0,),))
+    A = 0.5 * np.eye(n)
+    for j in range(n):
+        A[(j + 1) % n, j] = 0.5
+    nbrs = tuple((j, (j + 1) % n) for j in range(n))
+    return DirectedTopology("directed_ring", A, nbrs).validate()
+
+
+def random_digraph(n: int, extra_edge_prob: float = 0.3,
+                   seed: int = 0) -> DirectedTopology:
+    """Strongly-connected random digraph: the directed ring's j -> j+1 edges
+    (guaranteeing strong connectivity) plus i.i.d. extra directed edges.
+    Column j splits j's unit mass uniformly over {j} + out-neighbours —
+    out-degrees differ, so A is column- but not row-stochastic."""
+    if n == 1:
+        return DirectedTopology("random_digraph", np.ones((1, 1)), ((0,),))
+    rng = np.random.default_rng(seed)
+    out = [{(j + 1) % n} for j in range(n)]
+    for j in range(n):
+        for i in range(n):
+            if i != j and i != (j + 1) % n and rng.random() < extra_edge_prob:
+                out[j].add(i)
+    A = np.zeros((n, n))
+    for j in range(n):
+        share = 1.0 / (1 + len(out[j]))
+        A[j, j] = share
+        for i in out[j]:
+            A[i, j] = share
+    nbrs = tuple(tuple(sorted(out[j] | {j})) for j in range(n))
+    return DirectedTopology("random_digraph", A, nbrs).validate()
 
 
 def _from_adjacency(name: str, adj: np.ndarray) -> Topology:
@@ -131,7 +227,18 @@ _TOPOLOGIES = {
     "chain": lambda n: chain(n),
     "star": lambda n: star(n),
     "hypercube": lambda n: hypercube(n),
+    "directed_ring": lambda n: directed_ring(n),
+    "random_digraph": lambda n: random_digraph(n),
 }
+
+#: names whose make_topology result is a column-stochastic DirectedTopology —
+#: these require the push-sum engine; the symmetric CHOCO/plain engines must
+#: fail fast on them (launch/train.py, train/trainer.py)
+DIRECTED_TOPOLOGIES = frozenset({"directed_ring", "random_digraph"})
+
+
+def is_directed(name: str) -> bool:
+    return name in DIRECTED_TOPOLOGIES
 
 
 def _square_factors(n: int) -> Tuple[int, int]:

@@ -32,7 +32,10 @@ from repro.launch.env import simulate_host_devices
 # mirrors core.topology._TOPOLOGIES; kept literal so arg validation never
 # imports jax before XLA_FLAGS is set
 TOPOLOGY_CHOICES = ("ring", "torus", "hypercube", "star", "chain",
-                    "fully_connected")
+                    "fully_connected", "directed_ring", "random_digraph")
+# mirrors core.topology.DIRECTED_TOPOLOGIES (column-stochastic: push-sum only)
+DIRECTED_CHOICES = ("directed_ring", "random_digraph")
+PROCESS_CHOICES = ("none", "matching", "linkfail")
 
 
 def main(argv=None):
@@ -44,13 +47,28 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=None)
     ap.add_argument("--batch-per-node", type=int, default=None)
     ap.add_argument("--mode", default="choco",
-                    choices=["choco", "plain", "allreduce"])
+                    choices=["choco", "plain", "allreduce", "pushsum"])
     ap.add_argument("--topology", default="ring",
                     help="gossip graph (one of "
                          f"{'/'.join(TOPOLOGY_CHOICES)}), or a "
                          "comma-separated sequence for time-varying mixing, "
                          "cycled across the --gossip-steps rounds of each "
-                         "SGD step")
+                         "SGD step; directed graphs "
+                         f"({'/'.join(DIRECTED_CHOICES)}) require "
+                         "--mode pushsum")
+    ap.add_argument("--topology-process", default="none",
+                    choices=list(PROCESS_CHOICES),
+                    help="stochastic topology process: 'matching' samples "
+                         "one schedule round per gossip round (one permute "
+                         "launch/step), 'linkfail' drops each edge i.i.d. "
+                         "with --edge-drop-prob per round")
+    ap.add_argument("--edge-drop-prob", type=float, default=None,
+                    help="Bernoulli link-failure probability in [0, 1) "
+                         "(requires --topology-process linkfail)")
+    ap.add_argument("--matching-sampler", default=None,
+                    choices=["uniform", "weighted"],
+                    help="round sampler for --topology-process matching "
+                         "(default uniform)")
     ap.add_argument("--gossip-steps", type=int, default=1,
                     help="CHOCO gossip rounds per SGD step (k>1 trades wire "
                          "bytes for consensus; one pack amortizes the k "
@@ -73,6 +91,10 @@ def main(argv=None):
     ap.add_argument("--heterogeneity", type=float, default=1.0)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--keep-checkpoints", type=int, default=None,
+                    help="retain only the newest K checkpoint dirs under "
+                         "--checkpoint-dir (GC runs after each successful "
+                         "manifest write, never deletes the step just saved)")
     ap.add_argument("--resume", default=None,
                     help="sharded checkpoint dir (manifest.json) or a legacy "
                          "flat .npz; --steps stays the TOTAL budget")
@@ -102,6 +124,51 @@ def main(argv=None):
     if args.compressor == "qsgd" and args.qsgd_s is None:
         ap.error("--compressor qsgd requires --qsgd-s (quantization levels); "
                  "it takes no --fraction")
+    # directed topologies are column-stochastic: the symmetric choco/plain
+    # engines would converge to a Perron-biased point, never the average
+    directed = [t for t in topo_names if t in DIRECTED_CHOICES]
+    if directed and args.mode != "pushsum":
+        ap.error(f"--topology {args.topology!r} is directed "
+                 f"(column-stochastic); --mode {args.mode} assumes a "
+                 f"symmetric W. Directed graphs need the push-sum engine: "
+                 f"--mode pushsum (de-biased x/w, comm/pushsum.py)")
+    if args.mode == "pushsum":
+        if len(topo_names) > 1:
+            ap.error("--mode pushsum runs one directed schedule; "
+                     f"time-varying sequences are unsupported "
+                     f"(got --topology {args.topology!r})")
+        if args.topology_process != "none":
+            ap.error("--mode pushsum owns its directed schedule; combining "
+                     "it with --topology-process is unsupported")
+        if args.gossip_engine != "packed":
+            ap.error("--mode pushsum is packed-only (the weight scalar "
+                     "rides in-band with the bucket payloads); drop "
+                     "--gossip-engine per-leaf")
+    if args.topology_process != "none":
+        if len(topo_names) > 1:
+            ap.error(f"--topology-process {args.topology_process} is itself "
+                     f"the per-step mixing distribution; a time-varying "
+                     f"--topology sequence ({args.topology!r}) is ambiguous")
+        if args.mode == "allreduce":
+            ap.error("--topology-process has no effect under --mode "
+                     "allreduce (no gossip graph); drop one of the two")
+    if args.edge_drop_prob is not None:
+        if args.topology_process != "linkfail":
+            ap.error("--edge-drop-prob only applies to --topology-process "
+                     "linkfail")
+        if not 0.0 <= args.edge_drop_prob < 1.0:
+            ap.error(f"--edge-drop-prob must be in [0, 1), got "
+                     f"{args.edge_drop_prob} (p = 1 never mixes)")
+    if args.matching_sampler is not None \
+            and args.topology_process != "matching":
+        ap.error("--matching-sampler only applies to --topology-process "
+                 "matching")
+    if args.keep_checkpoints is not None:
+        if args.keep_checkpoints < 1:
+            ap.error(f"--keep-checkpoints must be >= 1, got "
+                     f"{args.keep_checkpoints}")
+        if not args.checkpoint_dir:
+            ap.error("--keep-checkpoints requires --checkpoint-dir")
 
     if args.simulate_devices:
         simulate_host_devices(args.simulate_devices)
@@ -130,10 +197,12 @@ def main(argv=None):
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
+    proc_info = ("" if args.topology_process == "none" else
+                 f" process={args.topology_process}")
     print(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"nodes={n_nodes} mode={args.mode} topology={args.topology} "
-          f"gossip_steps={args.gossip_steps}")
+          f"gossip_steps={args.gossip_steps}{proc_info}")
 
     if args.compressor == "qsgd":
         comp_kwargs = (("s", args.qsgd_s),)
@@ -148,7 +217,13 @@ def main(argv=None):
                           topology=args.topology,
                           gossip_steps=args.gossip_steps,
                           packed_gossip=(args.gossip_engine == "packed"),
-                          exact_small_leaves=args.exact_small_leaves),
+                          exact_small_leaves=args.exact_small_leaves,
+                          topology_process=(None if args.topology_process == "none"
+                                            else args.topology_process),
+                          edge_drop_prob=(args.edge_drop_prob
+                                          if args.edge_drop_prob is not None
+                                          else 0.1),
+                          matching_sampler=(args.matching_sampler or "uniform")),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),
@@ -215,7 +290,8 @@ def main(argv=None):
         if (args.checkpoint_dir and args.checkpoint_every
                 and (i + 1) % args.checkpoint_every == 0):
             path = os.path.join(args.checkpoint_dir, f"step{int(state.step)}")
-            trainer.save_checkpoint(path, state, metadata={"arch": cfg.name})
+            trainer.save_checkpoint(path, state, metadata={"arch": cfg.name},
+                                    keep_last=args.keep_checkpoints)
             print(f"[train] checkpointed {path}", flush=True)
     return 0
 

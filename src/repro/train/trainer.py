@@ -20,9 +20,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ChocoConfig, parse_topology
 from repro.core.compression import make_compressor
 from repro.core.choco_gossip import theorem2_stepsize
-from repro.core.topology import make_topology, torus2d
+from repro.core.topology import is_directed, make_topology, torus2d
 from repro.comm.gossip import make_gossip_exchange
-from repro.comm.schedule import compile_schedules
+from repro.comm.schedule import compile_directed_schedule, compile_schedules
 from repro.models.transformer import Model
 from repro.optim.sgd import Optimizer, OptState
 from repro.launch.sharding import param_pspecs, batch_pspecs
@@ -30,11 +30,16 @@ from repro.launch.sharding import param_pspecs, batch_pspecs
 
 class TrainState(NamedTuple):
     params: Any      # (n_nodes, ...) leaves — the x_i of Algorithm 2
-    x_hat: Any       # public copies
-    s: Any           # weighted neighbour aggregates
+    x_hat: Any       # public copies (list of per-round reference trees when
+                     #   a matching topology process is active)
+    s: Any           # weighted neighbour aggregates (list of per-round
+                     #   source-replica trees under a topology process)
     opt: OptState    # per-node optimizer moments
     step: jax.Array
     key: jax.Array
+    psw: Any = None  # push-sum (n, 1) weight column; None outside pushsum
+                     #   mode (None leaves vanish from the pytree, so every
+                     #   non-pushsum state keeps its pre-PR structure)
 
 
 @dataclasses.dataclass
@@ -50,9 +55,40 @@ class DecentralizedTrainer:
     def __post_init__(self):
         cfg = self.model.cfg
         self.compressor = (make_compressor(self.choco.compressor, **self.choco.comp_dict())
-                           if self.mode == "choco" else None)
+                           if self.mode in ("choco", "pushsum") else None)
         axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
         names = parse_topology(self.choco.topology)
+        directed = [n for n in names if is_directed(n)]
+        if directed and self.mode != "pushsum":
+            raise ValueError(
+                f"topology={self.choco.topology!r} is directed "
+                f"(column-stochastic): the symmetric {self.mode!r} engine "
+                f"would average with a non-row-stochastic matrix and "
+                f"converge to a Perron-biased point, not the mean.  Directed "
+                f"graphs require the push-sum engine: mode='pushsum' "
+                f"(comm/pushsum.py, de-biased x/w).")
+        if self.mode == "pushsum" and len(names) != 1:
+            raise ValueError(
+                f"push-sum runs one directed schedule; time-varying "
+                f"sequences are not supported (got topology="
+                f"{self.choco.topology!r})")
+        if self.choco.topology_process is not None:
+            if self.mode not in ("choco", "plain"):
+                raise ValueError(
+                    f"topology_process={self.choco.topology_process!r} runs "
+                    f"on the choco/plain engines; mode={self.mode!r} (the "
+                    f"push-sum engine owns its directed schedule, allreduce "
+                    f"has no gossip graph)")
+            if len(names) != 1:
+                raise ValueError(
+                    f"a topology process IS the per-step mixing "
+                    f"distribution; combining it with the time-varying "
+                    f"sequence {self.choco.topology!r} is ambiguous")
+            if directed:
+                raise ValueError(
+                    f"topology processes sample symmetric mixing matrices; "
+                    f"{self.choco.topology!r} is directed — use "
+                    f"mode='pushsum' without a process")
         # torus on a multi-pod mesh maps onto the (pod, data) ICI grid —
         # paper Table 1 delta = O(1/n) instead of the ring's O(1/n^2); every
         # other topology (and single-pod torus) lives on one gossip axis
@@ -76,11 +112,15 @@ class DecentralizedTrainer:
             f"gossip over {self.gossip_axis} = {n} nodes != n_nodes {self.n_nodes}"
         # compile the (possibly time-varying) topology sequence into static
         # permutation-round schedules — the engine replays them with one
-        # lax.ppermute per round
+        # lax.ppermute per round.  Directed topologies compile through the
+        # bipartite-coloring compiler for the push-sum engine.
         self.topologies = tuple(
             torus2d(*grid) if (name == "torus" and grid is not None)
             else make_topology(name, n) for name in names)
-        self.schedules = compile_schedules(self.topologies, grid=grid)
+        if directed:
+            self.schedules = (compile_directed_schedule(self.topologies[0]),)
+        else:
+            self.schedules = compile_schedules(self.topologies, grid=grid)
         if (len(self.schedules) > 1
                 and self.choco.gossip_steps % len(self.schedules) != 0):
             raise ValueError(
@@ -88,13 +128,27 @@ class DecentralizedTrainer:
                 f"sequence of {len(self.schedules)} graphs: gossip_steps "
                 f"must be a multiple of the sequence length so every graph "
                 f"runs each SGD step (got {self.choco.gossip_steps})")
+        # stochastic topology process over the compiled schedule
+        if self.choco.topology_process is not None:
+            from repro.comm.stochastic import make_topology_process
+            self.process = make_topology_process(
+                self.choco.topology_process, self.schedules[0],
+                matching_sampler=self.choco.matching_sampler,
+                edge_drop_prob=self.choco.edge_drop_prob)
+        else:
+            self.process = None
         # Theorem-2 consensus stepsize from the topology and compression;
-        # a time-varying sequence takes the conservative worst case
+        # a time-varying sequence takes the conservative worst case, a
+        # stochastic process the EXPECTED mixing matrix's (delta, beta)
+        # (Koloskova et al. 2020 analyze exactly that quantity)
         if self.choco.consensus_gamma is not None:
             self.gamma = self.choco.consensus_gamma
-        elif self.mode == "choco":
-            delta = min(t.delta for t in self.topologies)
-            beta = max(t.beta for t in self.topologies)
+        elif self.mode in ("choco", "pushsum"):
+            if self.process is not None:
+                delta, beta = self.process.expected_delta_beta()
+            else:
+                delta = min(t.delta for t in self.topologies)
+                beta = max(t.beta for t in self.topologies)
             self.gamma = theorem2_stepsize(delta, beta, self._worst_omega())
         else:
             self.gamma = 1.0
@@ -115,8 +169,12 @@ class DecentralizedTrainer:
                              fsdp_axis=self.fsdp_axis, model_size=0)
         spec_leaves = jax.tree_util.tree_leaves(
             specs, is_leaf=lambda x: isinstance(x, P))
+        # under a matching process x_hat is a LIST of reference trees; the
+        # engine compresses one tree's worth of deltas per round either way
+        hat_shape = (shape.x_hat[0] if isinstance(shape.x_hat, (list, tuple))
+                     else shape.x_hat)
         local = [jax.ShapeDtypeStruct(self._local_shape(l.shape, sp), l.dtype)
-                 for l, sp in zip(jax.tree.leaves(shape.x_hat), spec_leaves)]
+                 for l, sp in zip(jax.tree.leaves(hat_shape), spec_leaves)]
         spec = make_bucket_spec(
             local, align=_pack_align(self.compressor, self.choco.pack_align),
             exact_small_leaves=self.choco.exact_small_leaves,
@@ -144,6 +202,17 @@ class DecentralizedTrainer:
         model, n = self.model, self.n_nodes
 
         sdt = jnp.dtype(self.choco.state_dtype)
+        # replica layout under a topology process (comm/gossip.py
+        # make_process_choco_fn): matching keeps R per-round own references
+        # in x_hat and R source replicas in s; linkfail keeps the single
+        # public copy in x_hat and R replicas in s.  ONLY the compressed
+        # engine needs replicas — the plain engine ships the fresh iterate,
+        # so its x_hat/s stay the (unused) single trees.  Push-sum adds the
+        # (n, 1) weight column, init 1.
+        replicas = self.process is not None and self.mode == "choco"
+        n_rounds = len(self.process.schedule.rounds) if replicas else 0
+        matching = replicas and self.process.kind == "matching"
+        pushsum = self.mode == "pushsum"
 
         def init(key):
             pkeys = jax.random.split(key, n)
@@ -152,8 +221,14 @@ class DecentralizedTrainer:
                 lambda p: jnp.zeros(p.shape, sdt if jnp.issubdtype(p.dtype, jnp.floating)
                                     else p.dtype), params)
             opt = self.optimizer.init(params)
-            return TrainState(params=params, x_hat=ef_zeros(), s=ef_zeros(),
-                              opt=opt, step=jnp.zeros((), jnp.int32), key=key)
+            x_hat = ([ef_zeros() for _ in range(n_rounds)] if matching
+                     else ef_zeros())
+            s = ([ef_zeros() for _ in range(n_rounds)] if n_rounds
+                 else ef_zeros())
+            psw = jnp.ones((n, 1), jnp.float32) if pushsum else None
+            return TrainState(params=params, x_hat=x_hat, s=s,
+                              opt=opt, step=jnp.zeros((), jnp.int32),
+                              key=key, psw=psw)
         return init
 
     def state_shape(self, key=None):
@@ -169,10 +244,12 @@ class DecentralizedTrainer:
             mu=None if opt_shape.mu is None else pspec(opt_shape.mu),
             nu=None if opt_shape.nu is None else pspec(opt_shape.nu),
             count=P())
+        psw_spec = (None if state_shape.psw is None
+                    else P(self.gossip_axis, None))
         return TrainState(params=pspec(state_shape.params),
                           x_hat=pspec(state_shape.x_hat),
                           s=pspec(state_shape.s),
-                          opt=opt_spec, step=P(), key=P())
+                          opt=opt_spec, step=P(), key=P(), psw=psw_spec)
 
     def state_shardings(self, state_shape=None) -> TrainState:
         """NamedSharding pytree for the TrainState — the target layout the
@@ -204,16 +281,24 @@ class DecentralizedTrainer:
             "mode": self.mode,
             "compressor": self.choco.compressor,
             "state_dtype": self.choco.state_dtype,
+            "topology_process": self.choco.topology_process,
+            "edge_drop_prob": self.choco.edge_drop_prob,
+            "matching_sampler": self.choco.matching_sampler,
         }
 
     def save_checkpoint(self, path: str, state: TrainState,
-                        metadata: Optional[dict] = None) -> str:
+                        metadata: Optional[dict] = None,
+                        keep_last: Optional[int] = None) -> str:
         """Sharded per-host save of the full TrainState (including the CHOCO
-        error-feedback states — Theorem 2 needs them across restarts)."""
+        error-feedback states — Theorem 2 needs them across restarts).
+
+        keep_last: after a successful save (manifest rename), delete all but
+        the newest k sibling checkpoint dirs (never the one just written) —
+        see checkpoint/checkpointing.py gc_checkpoints."""
         from repro.checkpoint.checkpointing import save_sharded
         return save_sharded(path, state, step=int(jax.device_get(state.step)),
                             fingerprint=self.fingerprint(),
-                            metadata=metadata or {})
+                            metadata=metadata or {}, keep_last=keep_last)
 
     def restore_checkpoint(self, path: str) -> Tuple[TrainState, Any, int]:
         """Restore a sharded checkpoint directly under this trainer's
@@ -237,6 +322,21 @@ class DecentralizedTrainer:
         saved_topo = man.fingerprint.get("topology")
         same_nodes = n_old is None or n_old == self.n_nodes
         same_graph = saved_topo is None or saved_topo == self.choco.topology
+        # a topology-process change re-shapes the replica state (x_hat / s
+        # become per-round lists), so it takes the same re-mix path as a
+        # graph change
+        fp = man.fingerprint
+        same_proc = (fp.get("topology_process", None)
+                     == self.choco.topology_process)
+        same_graph = same_graph and same_proc
+        if self.mode == "pushsum" and not (same_nodes and same_graph):
+            from repro.checkpoint.manifest import ElasticRestoreError
+            raise ElasticRestoreError(
+                f"elastic restore is not supported for push-sum: the weight "
+                f"column w encodes conserved mass (1^T w = n) that a node-"
+                f"count or graph change would corrupt (checkpoint "
+                f"n_nodes={n_old}, topology={saved_topo!r} -> "
+                f"n_nodes={self.n_nodes}, topology={self.choco.topology!r})")
         if same_nodes and (self.mode != "choco" or same_graph):
             return restore_sharded(path, shape, shardings), man, 0
         if not same_nodes:
@@ -251,7 +351,13 @@ class DecentralizedTrainer:
                                     reset_prefixes=("x_hat", "s"))
         if self.mode != "choco":      # no EF state to re-seed in exact modes
             return state, man, 0
-        delta = min(t.delta for t in self.topologies)
+        # warmup contracts at the graph the warmup actually runs on: the
+        # process's EXPECTED eigengap when one is active (matching the gamma
+        # derivation), the static worst case otherwise
+        if self.process is not None:
+            delta = self.process.expected_delta_beta()[0]
+        else:
+            delta = min(t.delta for t in self.topologies)
         return state, man, consensus_warmup_rounds(delta)
 
     def consensus_warmup(self, state: TrainState, rounds: int) -> TrainState:
@@ -279,26 +385,44 @@ class DecentralizedTrainer:
 
     def make_train_step(self):
         model, opt, lr_fn = self.model, self.optimizer, self.lr_fn
+        pushsum = self.mode == "pushsum"
 
         def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
-            # 1. per-node stochastic gradient (no cross-node collectives)
+            # 1. per-node stochastic gradient (no cross-node collectives).
+            # Push-sum (SGP, Assran et al. 2019): x <- x - lr * gradF(z) —
+            # the gradient is EVALUATED at the de-biased estimate z = x / w
+            # (x itself is Perron-biased mid-consensus) but is the gradient
+            # w.r.t. z, NOT d/dx F(x/w): differentiating through the
+            # division would scale node i's step by a spurious 1/w_i.
             def loss_fn(p, b):
                 loss, metrics = model.loss(p, b)
                 return loss, metrics
+            if pushsum:
+                from repro.comm.pushsum import debias
+                z = debias(state.params, state.psw)
+            else:
+                z = state.params
             (losses, metrics), grads = jax.vmap(
-                jax.value_and_grad(loss_fn, has_aux=True))(state.params, batch)
+                jax.value_and_grad(loss_fn, has_aux=True))(z, batch)
 
             # 2. local optimizer half-step  x^{t+1/2}
             lr = lr_fn(state.step)
             x_half, new_opt = opt.update(state.params, grads, state.opt, lr)
 
-            # 3. gossip exchange (CHOCO / plain / all-reduce)
+            # 3. gossip exchange (CHOCO / plain / all-reduce / push-sum)
             gkey = jax.random.fold_in(state.key, state.step)
             exchange = self._exchange(state.params)   # specs from leaf ndims
-            new_params, new_hat, new_s = exchange(gkey, x_half, state.x_hat, state.s)
+            if pushsum:
+                new_params, new_hat, new_s, new_w = exchange(
+                    gkey, x_half, state.x_hat, state.s, state.psw)
+            else:
+                new_params, new_hat, new_s = exchange(gkey, x_half,
+                                                      state.x_hat, state.s)
+                new_w = state.psw
 
             out = TrainState(params=new_params, x_hat=new_hat, s=new_s,
-                             opt=new_opt, step=state.step + 1, key=state.key)
+                             opt=new_opt, step=state.step + 1, key=state.key,
+                             psw=new_w)
             mets = {"loss": jnp.mean(losses), "lr": lr,
                     "grad_norm": _global_norm(grads)}
             for k, v in metrics.items():
@@ -319,7 +443,10 @@ class DecentralizedTrainer:
             packed=self.choco.packed_gossip,
             pack_align=self.choco.pack_align,
             schedules=self.schedules,
-            gossip_steps=self.choco.gossip_steps)
+            gossip_steps=self.choco.gossip_steps,
+            process=self.process,
+            weight_specs=(P(self.gossip_axis, None)
+                          if self.mode == "pushsum" else None))
 
     # -- jit with shardings -----------------------------------------------------
 

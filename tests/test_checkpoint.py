@@ -236,3 +236,48 @@ def test_consensus_warmup_rounds():
     assert consensus_warmup_rounds(1e-6) == 64
     with pytest.raises(ElasticRestoreError):
         consensus_warmup_rounds(0.0)
+
+
+# ---------------------------------------------------------------------------
+# retention / GC (save_sharded keep_last)
+# ---------------------------------------------------------------------------
+
+def test_keep_last_gc_deletes_oldest(tmp_path):
+    from repro.checkpoint.checkpointing import gc_checkpoints
+    base = tmp_path / "ckpts"
+    for step in (10, 20, 30):
+        save_sharded(str(base / f"step{step}"), _tree(), step=step)
+    # keep_last applied on the 4th save: only the newest 2 survive
+    save_sharded(str(base / "step40"), _tree(), step=40, keep_last=2)
+    kept = sorted(p.name for p in base.iterdir())
+    assert kept == ["step30", "step40"], kept
+    # every survivor is still a complete, restorable checkpoint
+    for name in kept:
+        restore_sharded(str(base / name), _tree())
+    # idempotent: nothing more to delete
+    assert gc_checkpoints(str(base), 2) == []
+
+
+def test_keep_last_never_deletes_step_being_written(tmp_path):
+    base = tmp_path / "ckpts"
+    save_sharded(str(base / "step5"), _tree(), step=5)
+    # keep_last=1 with the new save protected: the NEW dir survives even
+    # though an adversarial ordering might sort it for deletion
+    save_sharded(str(base / "step9"), _tree(), step=9, keep_last=1)
+    assert sorted(p.name for p in base.iterdir()) == ["step9"]
+    restore_sharded(str(base / "step9"), _tree())
+
+
+def test_keep_last_ignores_torn_dirs_and_foreign_files(tmp_path):
+    from repro.checkpoint.checkpointing import gc_checkpoints
+    base = tmp_path / "ckpts"
+    base.mkdir()
+    (base / "torn").mkdir()                      # no manifest: never touched
+    (base / "torn" / "shards-p00000.npz").write_bytes(b"x")
+    (base / "notes.txt").write_text("keep me")
+    save_sharded(str(base / "step1"), _tree(), step=1)
+    save_sharded(str(base / "step2"), _tree(), step=2, keep_last=1)
+    names = sorted(p.name for p in base.iterdir())
+    assert names == ["notes.txt", "step2", "torn"], names
+    with pytest.raises(ValueError, match="keep_last"):
+        gc_checkpoints(str(base), 0)
