@@ -1,5 +1,11 @@
 """Distributed CHOCO gossip over a device mesh, driven by compiled schedules.
 
+Implements the source paper's Algorithm 2 lines 4-9 / Algorithm 5 (choco),
+Algorithm 3 (plain), and the engine dispatch for the stochastic-process and
+push-sum variants.  Wire audits: EXPERIMENTS.md §Perf D (bucketed payloads)
+and §Perf E (schedule replay); the stochastic engines are audited in
+§Perf F and the bounded-staleness engine in §Perf G.
+
 The gossip graph lives on one or more mesh axes (``axes``): every slice of
 the mesh along those axes is one "node" of the paper's communication graph.
 The exchange is implemented inside ``shard_map`` with ``jax.lax.ppermute``
@@ -467,6 +473,40 @@ def _send_vec(perm, n) -> Tuple[float, ...]:
     return tuple(vec)
 
 
+def _make_compress_stage(compressor: Compressor, *, packed: bool, align: int,
+                         leaf_routes: Optional[list]) -> Callable:
+    """Shared compression front half of the replica-based engines: returns
+    ``stage(tkey, deltas, shapes_like) -> (payloads, q_leaves, dense_fn)``
+    where ``payloads`` are the wire arrays handed to ``lax.ppermute``,
+    ``q_leaves`` the dense local q per leaf, and ``dense_fn`` densifies a
+    received payload back to per-leaf flat buffers.  ``packed`` selects the
+    bucketed flat-buffer path (one payload per bucket) vs the legacy
+    per-leaf path; both are consumed by ``make_process_choco_fn`` and the
+    bounded-staleness engine (comm/async_gossip.py)."""
+    def packed_stage(tkey, deltas, shapes_like):
+        from repro.comm.packing import (bucket_dense, compress_packed,
+                                        make_bucket_spec, unpack_leaves)
+        spec = make_bucket_spec(shapes_like, align=align, routes=leaf_routes)
+        payloads, q_leaves = compress_packed(compressor, tkey, spec, deltas)
+        dense_fn = lambda got: unpack_leaves(
+            spec, [bucket_dense(g, b) for g, b in zip(got, spec.buckets)])
+        return payloads, q_leaves, dense_fn
+
+    def per_leaf_stage(tkey, deltas, shapes_like):
+        keys = _leaf_keys(tkey, len(deltas), 0)
+        payloads, dfns, q_leaves = [], [], []
+        for i, d in enumerate(deltas):
+            pl, dfn = _compress_leaf(
+                compressor, keys[i] if compressor.stochastic else None, d)
+            payloads.append(pl)
+            dfns.append(dfn)
+            q_leaves.append(dfn(pl))
+        return payloads, q_leaves, (
+            lambda got: [dfn(g) for dfn, g in zip(dfns, got)])
+
+    return packed_stage if packed else per_leaf_stage
+
+
 def make_process_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                           process, compressor: Compressor, gamma: float,
                           gossip_steps: int = 1, packed: bool = True,
@@ -517,28 +557,9 @@ def make_process_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     R = len(rounds)
     send_vecs = [_send_vec(rnd.perm, n) for rnd in rounds]
 
-    def compress_stage(tkey, deltas, shapes_like):
-        """(payloads, q_leaves, dense_fn) — packed or per-leaf."""
-        if packed:
-            from repro.comm.packing import (bucket_dense, compress_packed,
-                                            make_bucket_spec, unpack_leaves)
-            spec = make_bucket_spec(shapes_like, align=align,
-                                    routes=leaf_routes)
-            payloads, q_leaves = compress_packed(compressor, tkey, spec,
-                                                 deltas)
-            dense_fn = lambda got: unpack_leaves(
-                spec, [bucket_dense(g, b) for g, b in zip(got, spec.buckets)])
-            return payloads, q_leaves, dense_fn
-        keys = _leaf_keys(tkey, len(deltas), 0)
-        payloads, dfns, q_leaves = [], [], []
-        for i, d in enumerate(deltas):
-            pl, dfn = _compress_leaf(
-                compressor, keys[i] if compressor.stochastic else None, d)
-            payloads.append(pl)
-            dfns.append(dfn)
-            q_leaves.append(dfn(pl))
-        return payloads, q_leaves, (
-            lambda got: [dfn(g) for dfn, g in zip(dfns, got)])
+    compress_stage = _make_compress_stage(compressor, packed=packed,
+                                          align=align,
+                                          leaf_routes=leaf_routes)
 
     def matching_local_fn(key, x_half, hat_list, s_list):
         sample_key = key
@@ -746,6 +767,12 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
                 f"topology processes run on the choco/plain engines only; "
                 f"mode={mode!r} (the push-sum engine handles directed graphs "
                 f"itself, allreduce has no gossip graph)")
+        if getattr(process, "kind", None) == "staleness" and mode != "choco":
+            raise ValueError(
+                "bounded staleness runs on the compressed choco engine "
+                "only: the stale snapshots are reconstructed from rings of "
+                "compressed increments, and the plain engine ships fresh "
+                "iterates with no increment stream to ring-buffer")
         if schedules is not None and len(tuple(schedules)) > 1:
             raise ValueError(
                 "a topology process already IS the per-step mixing "
@@ -790,6 +817,27 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             f"time-varying mixing with {len(schedules)} schedules needs "
             f"gossip_steps to be a multiple of the sequence length so every "
             f"schedule runs each SGD step; got gossip_steps={gossip_steps}")
+
+    if mode == "choco" and process is not None \
+            and getattr(process, "kind", None) == "staleness":
+        # bounded-staleness engine (comm/async_gossip.py): x_hat is the
+        # [public copy + depth-tau own ring] list, s the [R replicas +
+        # R*tau receive rings] list — see make_async_choco_fn
+        from repro.comm.async_gossip import make_async_choco_fn
+        local_fn = make_async_choco_fn(
+            axes=axes, sizes=sizes, process=process, compressor=compressor,
+            gamma=gamma, gossip_steps=gossip_steps, packed=packed,
+            pack_align=pack_align,
+            leaf_routes=_leaf_routes(state_specs, axes))
+        R = len(process.schedule.rounds)
+        tau = process.max_staleness
+        hat_specs = [state_specs] * (1 + tau)
+        s_specs = [state_specs] * (R * (1 + tau))
+        return shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(), state_specs, hat_specs, s_specs),
+            out_specs=(state_specs, hat_specs, s_specs),
+        )
 
     if mode == "choco" and process is not None:
         # replica-based engine: x_hat / s are LISTS of state trees (per-round

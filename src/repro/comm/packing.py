@@ -1,5 +1,9 @@
 """Bucketed flat-buffer packing for the CHOCO gossip exchange.
 
+The wire format of the paper's Algorithm-2 messages q_i = Q(x_i - x_hat_i):
+payload layout, wire-bit accounting, and the packed-vs-per-leaf launch
+audit live in EXPERIMENTS.md §Perf A and §Perf D.
+
 The per-leaf gossip path compresses and ppermutes every pytree leaf in a
 Python loop — for a transformer that is dozens of top-k launches and
 collective-permutes per round, exactly the launch-overhead regime Koloskova
@@ -182,12 +186,16 @@ def unpack_leaves(spec: BucketSpec, bufs: Sequence[jax.Array]
 
 
 def pack_pytree(spec: BucketSpec, tree) -> List[jax.Array]:
+    """Pack a whole pytree (matching the spec's treedef) into the bucket
+    buffers — ``pack_leaves`` plus the structure check."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     assert treedef == spec.treedef, "pytree structure does not match the spec"
     return pack_leaves(spec, leaves)
 
 
 def unpack_pytree(spec: BucketSpec, bufs: Sequence[jax.Array]):
+    """Inverse of :func:`pack_pytree`: bucket buffers back to a pytree with
+    the spec's structure and per-leaf shapes/dtypes."""
     flats = unpack_leaves(spec, bufs)
     leaves = [f.reshape(s.shape) for f, s in zip(flats, sorted(
         spec.slots, key=lambda sl: sl.leaf))]

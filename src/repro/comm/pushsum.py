@@ -1,5 +1,9 @@
 """Directed push-sum gossip with compressed payloads (column-stochastic A).
 
+CHOCO-style error feedback (paper Algorithm 2's q/x_hat machinery) on a
+directed graph; consensus-rate and in-band weight audits are logged in
+EXPERIMENTS.md §Perf F.
+
 The symmetric CHOCO engines average with a row-stochastic, symmetric W; on a
 directed graph the natural mixing matrix A is only *column*-stochastic
 (every node splits its unit mass over its out-neighbours: 1^T A = 1^T), so

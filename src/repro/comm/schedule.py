@@ -1,5 +1,9 @@
 """Topology-compiled gossip schedules.
 
+Compilation determinism, round counts per graph family, and the
+launch/byte audits of schedule replay are logged in EXPERIMENTS.md
+§Perf E (directed bipartite coloring for push-sum: §Perf F).
+
 The paper's rate depends only on the spectral gap of the mixing matrix W
 (Definition 1, Table 1), but a distributed runtime needs W expressed as data
 movement: which node sends to which, in how many synchronous rounds, with

@@ -1,5 +1,12 @@
 """Stochastic topology processes: per-step distributions over mixing matrices.
 
+The process engines realize the source paper's Algorithm 2 (per-neighbour
+public copies) rather than the Algorithm-5 aggregate — §Perf F of
+EXPERIMENTS.md records why (the s-aggregate is a noise integrator under
+sampled W) plus the consensus-rate and single-launch audits; the
+bounded-staleness member of this family lives in comm/async_gossip.py
+(§Perf G).
+
 PR 2's schedule compiler turned a *fixed* Topology into a static round
 decomposition.  Real deployments see time-varying and unreliable links, and
 the theory tolerates them: Koloskova et al. (2020) show CHOCO-style error
@@ -107,6 +114,44 @@ class TopologyProcess:
         (Koloskova et al. 2020 analyze exactly this quantity)."""
         E = self.expected_matrix()
         return spectral_gap(E), beta_norm(E)
+
+    def effective_omega(self, omega: float) -> float:
+        """Assumption-1 compression quality as the Theorem-2 stepsize should
+        see it under this process.  The default is the compressor's own
+        omega; processes that let compressed increments go stale before they
+        are consumed (comm/async_gossip.py StalenessProcess) shrink it by
+        their worst-case outstanding-update count."""
+        return omega
+
+
+def _index_schedule_edges(schedule: GossipSchedule):
+    """Canonical undirected-edge indexing of a compiled schedule's support.
+
+    Returns ``(edges, round_edge_ids, round_recv)``: ``edges`` is the tuple
+    of canonical ``(min, max)`` node pairs in first-seen order;
+    ``round_edge_ids[r][dst]`` is the edge id feeding destination ``dst`` in
+    round r (−1 when the round's partial permutation skips it); and
+    ``round_recv[r]`` is the round's per-destination receive-weight vector.
+    Both directions of a physical link map to ONE edge id, which is what
+    lets :class:`LinkFailureProcess` drop them together and
+    :class:`~repro.comm.async_gossip.StalenessProcess` delay them together
+    (delays must be shared per edge or the pairwise stale exchange would
+    stop preserving the node average)."""
+    n = schedule.n
+    edges = {}                      # canonical {i, j} -> edge id
+    round_edge_ids = []             # per round: (n,) dst -> edge id | -1
+    round_recv = []                 # per round: (n,) receive weights
+    for rnd in schedule.rounds:
+        ids = np.full(n, -1, dtype=np.int32)
+        for src, dst in rnd.perm:
+            e = (min(src, dst), max(src, dst))
+            if e not in edges:
+                edges[e] = len(edges)
+            ids[dst] = edges[e]
+        round_edge_ids.append(tuple(int(v) for v in ids))
+        round_recv.append(tuple(round_recv_vec(rnd, n)))
+    return (tuple(sorted(edges, key=edges.get)), tuple(round_edge_ids),
+            tuple(round_recv))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -234,26 +279,12 @@ class LinkFailureProcess(TopologyProcess):
         if not 0.0 <= self.drop_prob < 1.0:
             raise ValueError(f"drop_prob must be in [0, 1), got "
                              f"{self.drop_prob} (p = 1 never mixes)")
-        n = self.schedule.n
-        edges = {}                      # canonical {i, j} -> edge id
-        round_edge_ids = []             # per round: (n,) dst -> edge id | -1
-        round_recv = []                 # per round: (n,) receive weights
-        for rnd in self.schedule.rounds:
-            ids = np.full(n, -1, dtype=np.int32)
-            for src, dst in rnd.perm:
-                e = (min(src, dst), max(src, dst))
-                if e not in edges:
-                    edges[e] = len(edges)
-                ids[dst] = edges[e]
-            round_edge_ids.append(ids)
-            round_recv.append(round_recv_vec(rnd, n))
+        edges, round_edge_ids, round_recv = _index_schedule_edges(
+            self.schedule)
         object.__setattr__(self, "n_edges", len(edges))
-        object.__setattr__(self, "_edges", tuple(sorted(edges, key=edges.get)))
-        object.__setattr__(self, "round_edge_ids",
-                           tuple(tuple(int(v) for v in ids)
-                                 for ids in round_edge_ids))
-        object.__setattr__(self, "round_recv",
-                           tuple(tuple(row) for row in round_recv))
+        object.__setattr__(self, "_edges", edges)
+        object.__setattr__(self, "round_edge_ids", round_edge_ids)
+        object.__setattr__(self, "round_recv", round_recv)
 
     kind = "linkfail"
 
@@ -302,17 +333,24 @@ class LinkFailureProcess(TopologyProcess):
 
 def make_topology_process(kind: str, schedule: GossipSchedule, *,
                           matching_sampler: str = "uniform",
-                          edge_drop_prob: float = 0.1) -> TopologyProcess:
+                          edge_drop_prob: float = 0.1,
+                          max_staleness: int = 1,
+                          delay_probs=None) -> TopologyProcess:
     """Named-process registry mirrored by the ``--topology-process`` CLI."""
     if kind == "matching":
         return MatchingProcess(schedule, sampler=matching_sampler)
     if kind == "linkfail":
         return LinkFailureProcess(schedule, drop_prob=edge_drop_prob)
+    if kind == "staleness":
+        from repro.comm.async_gossip import StalenessProcess
+        return StalenessProcess(schedule, max_staleness=max_staleness,
+                                delay_probs=delay_probs)
     raise ValueError(f"unknown topology process {kind!r}; "
-                     f"have ('matching', 'linkfail')")
+                     f"have ('matching', 'linkfail', 'staleness')")
 
 
 def process_from_topology(kind: str, topo: Topology, **kw) -> TopologyProcess:
+    """Convenience: compile ``topo`` and build the named process over it."""
     return make_topology_process(kind, compile_schedule(topo), **kw)
 
 
@@ -332,6 +370,8 @@ class ProcessGossipState:
 
 def init_process_state(x0: jax.Array,
                        process: TopologyProcess) -> ProcessGossipState:
+    """Zero-initialised simulator state with the process's reference layout
+    (matching: (R, n, d) per-round refs; linkfail: a single (n, d) copy)."""
     if process.kind == "matching":
         R = process.schedule.n_rounds
         refs = jnp.zeros((R,) + x0.shape, x0.dtype)

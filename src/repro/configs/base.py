@@ -221,9 +221,18 @@ class ChocoConfig:
     # drops each edge i.i.d. with edge_drop_prob per round (weights
     # renormalized into the diagonal).  Theorem-2 gamma is re-derived from
     # the EXPECTED mixing matrix's eigengap.
+    # "staleness" runs the bounded-staleness async engine
+    # (comm/async_gossip.py): every edge's payload may arrive up to
+    # max_staleness rounds late (per-edge delay sampled from the shared
+    # exchange key) and nodes proceed on the freshest copy they hold.
     topology_process: Optional[str] = None
     edge_drop_prob: float = 0.1          # linkfail Bernoulli drop probability
     matching_sampler: str = "uniform"    # matching round sampler: uniform|weighted
+    # staleness bound tau for topology_process="staleness": per-edge delays
+    # are sampled uniformly from {0..tau} (tau=0 degenerates to the always-
+    # fresh replica engine).  Theorem-2 gamma folds tau into omega and uses
+    # the delay-averaged mixing matrix phi*W + (1-phi)*I, phi = E[1/(1+d)].
+    max_staleness: int = 1
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

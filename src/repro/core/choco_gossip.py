@@ -148,6 +148,86 @@ def auto_stepsize(topo: Topology, compressor: Compressor, d: int) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Bounded-staleness gossip — matrix simulator twin of comm/async_gossip.py.
+# Each edge's update reads the endpoints' public copies as of d(t) steps ago
+# (d <= tau, sampled per edge from the shared exchange key); since
+# x_hat^(t-d) = x_hat^(t) - (last d compressed increments), a ring of the
+# last tau global q's reconstructs every stale snapshot, and the per-node
+# replicas of the distributed engine are just rows of the global state here.
+# ---------------------------------------------------------------------------
+
+class StaleGossipState(NamedTuple):
+    x: jax.Array        # (n, d) local iterates
+    x_hat: jax.Array    # (n, d) public copies (fresh)
+    ring: jax.Array     # (tau, n, d): ring[j] = the global q of j steps ago
+
+
+def init_stale_state(x0: jax.Array, max_staleness: int) -> StaleGossipState:
+    """Zero-initialised bounded-staleness state with a depth-``max_staleness``
+    increment ring."""
+    return StaleGossipState(
+        x=x0, x_hat=jnp.zeros_like(x0),
+        ring=jnp.zeros((max_staleness,) + x0.shape, x0.dtype))
+
+
+def choco_stale_round(state: StaleGossipState, process, gamma: float,
+                      compressor: Compressor, key: jax.Array, t: int = 0,
+                      comp_key: Optional[jax.Array] = None
+                      ) -> StaleGossipState:
+    """One bounded-staleness gossip round — the matrix twin of
+    ``comm/async_gossip.py make_async_choco_fn`` (see its docstring for the
+    replica/ring layout the distributed engine carries; the global view here
+    needs none of it).  ``process`` is a
+    :class:`~repro.comm.async_gossip.StalenessProcess`; ``key`` is the
+    EXCHANGE key (pre-axis-fold), so engine parity requires driving both
+    with the same key sequence and a deterministic compressor.
+
+        q = Q(x - x_hat);  x_hat += q;  ring <- [q, ring[:-1]]
+        d_e ~ delay_probs per edge (shared key);  per round r, dst i:
+        x_i += gamma * v_r[i] * (x_hat^(t-d)[src_r(i)] - x_hat^(t-d)[i])
+
+    with ``x_hat^(t-d) = x_hat - sum_{j<d} ring[j]``.
+    """
+    tau = int(state.ring.shape[0])
+    q = _rowwise_compress(compressor, comp_key, state.x - state.x_hat)
+    x_hat = state.x_hat + q
+    ring = (jnp.concatenate([q[None], state.ring[:-1]], axis=0) if tau
+            else state.ring)
+    dvecs = process.round_delay_vecs(key, t)
+    acc = jnp.zeros_like(state.x)
+    for r, src in enumerate(process.round_src):
+        src = jnp.asarray(src)
+        v = jnp.asarray(process.round_recv[r], jnp.float32)[:, None]
+        d = dvecs[r]
+        diff = x_hat[src, :] - x_hat
+        for j in range(tau):
+            m = (d > j).astype(jnp.float32)[:, None]
+            diff = diff - m * (ring[j][src, :] - ring[j])
+        acc = acc + v * diff
+    return StaleGossipState(x=state.x + gamma * acc, x_hat=x_hat, ring=ring)
+
+
+def run_choco_stale_gossip(x0: jax.Array, process, gamma: float,
+                           compressor: Compressor, steps: int,
+                           key: Optional[jax.Array] = None):
+    """Run `steps` bounded-staleness rounds, mirroring the trainer's seed
+    plumbing (exchange key = fold_in(key, step)).  Returns
+    (final StaleGossipState, per-step consensus errors)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+    st = init_stale_state(x0, process.max_staleness)
+    errs = []
+    for step in range(steps):
+        ek = jax.random.fold_in(key, step)
+        ck = jax.random.fold_in(ek, 1) if compressor.stochastic else None
+        st = choco_stale_round(st, process, gamma, compressor, ek,
+                               t=0, comp_key=ck)
+        errs.append(jnp.mean(jnp.sum((st.x - xbar) ** 2, axis=-1)))
+    return st, jnp.stack(errs)
+
+
+# ---------------------------------------------------------------------------
 # Directed push-sum (column-stochastic A) — matrix simulator twin of
 # comm/pushsum.py.  Neither x nor the weight w converges alone; the
 # de-biased ratio z = x / w does, because 1^T A = 1^T conserves both sums.

@@ -35,7 +35,7 @@ TOPOLOGY_CHOICES = ("ring", "torus", "hypercube", "star", "chain",
                     "fully_connected", "directed_ring", "random_digraph")
 # mirrors core.topology.DIRECTED_TOPOLOGIES (column-stochastic: push-sum only)
 DIRECTED_CHOICES = ("directed_ring", "random_digraph")
-PROCESS_CHOICES = ("none", "matching", "linkfail")
+PROCESS_CHOICES = ("none", "matching", "linkfail", "staleness")
 
 
 def main(argv=None):
@@ -61,7 +61,10 @@ def main(argv=None):
                     help="stochastic topology process: 'matching' samples "
                          "one schedule round per gossip round (one permute "
                          "launch/step), 'linkfail' drops each edge i.i.d. "
-                         "with --edge-drop-prob per round")
+                         "with --edge-drop-prob per round, 'staleness' runs "
+                         "the bounded-staleness async engine (per-edge "
+                         "delays up to --max-staleness rounds; nodes "
+                         "proceed on the freshest copy they hold)")
     ap.add_argument("--edge-drop-prob", type=float, default=None,
                     help="Bernoulli link-failure probability in [0, 1) "
                          "(requires --topology-process linkfail)")
@@ -69,6 +72,11 @@ def main(argv=None):
                     choices=["uniform", "weighted"],
                     help="round sampler for --topology-process matching "
                          "(default uniform)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="staleness bound tau >= 0 for --topology-process "
+                         "staleness: per-edge payload delays are sampled "
+                         "uniformly from {0..tau} (default 1; tau=0 is the "
+                         "always-fresh replica engine)")
     ap.add_argument("--gossip-steps", type=int, default=1,
                     help="CHOCO gossip rounds per SGD step (k>1 trades wire "
                          "bytes for consensus; one pack amortizes the k "
@@ -163,6 +171,21 @@ def main(argv=None):
             and args.topology_process != "matching":
         ap.error("--matching-sampler only applies to --topology-process "
                  "matching")
+    # bounded staleness reconstructs stale snapshots from rings of
+    # compressed increments: only the compressed choco engine has that
+    # increment stream (plain ships fresh iterates, allreduce/pushsum are
+    # rejected for any process above)
+    if args.topology_process == "staleness" and args.mode != "choco":
+        ap.error(f"--topology-process staleness requires --mode choco "
+                 f"(got --mode {args.mode}): the async engine ring-buffers "
+                 f"compressed increments, which only the choco engine ships")
+    if args.max_staleness is not None:
+        if args.topology_process != "staleness":
+            ap.error("--max-staleness only applies to --topology-process "
+                     "staleness")
+        if args.max_staleness < 0:
+            ap.error(f"--max-staleness must be >= 0, got "
+                     f"{args.max_staleness}")
     if args.keep_checkpoints is not None:
         if args.keep_checkpoints < 1:
             ap.error(f"--keep-checkpoints must be >= 1, got "
@@ -223,7 +246,10 @@ def main(argv=None):
                           edge_drop_prob=(args.edge_drop_prob
                                           if args.edge_drop_prob is not None
                                           else 0.1),
-                          matching_sampler=(args.matching_sampler or "uniform")),
+                          matching_sampler=(args.matching_sampler or "uniform"),
+                          max_staleness=(args.max_staleness
+                                         if args.max_staleness is not None
+                                         else 1)),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),

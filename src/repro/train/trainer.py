@@ -130,11 +130,20 @@ class DecentralizedTrainer:
                 f"runs each SGD step (got {self.choco.gossip_steps})")
         # stochastic topology process over the compiled schedule
         if self.choco.topology_process is not None:
+            if (self.choco.topology_process == "staleness"
+                    and self.mode != "choco"):
+                raise ValueError(
+                    f"topology_process='staleness' runs on the compressed "
+                    f"choco engine only (mode={self.mode!r}): the stale "
+                    f"snapshots are reconstructed from rings of compressed "
+                    f"increments — the plain engine ships fresh iterates "
+                    f"with no increment stream to ring-buffer")
             from repro.comm.stochastic import make_topology_process
             self.process = make_topology_process(
                 self.choco.topology_process, self.schedules[0],
                 matching_sampler=self.choco.matching_sampler,
-                edge_drop_prob=self.choco.edge_drop_prob)
+                edge_drop_prob=self.choco.edge_drop_prob,
+                max_staleness=self.choco.max_staleness)
         else:
             self.process = None
         # Theorem-2 consensus stepsize from the topology and compression;
@@ -144,12 +153,16 @@ class DecentralizedTrainer:
         if self.choco.consensus_gamma is not None:
             self.gamma = self.choco.consensus_gamma
         elif self.mode in ("choco", "pushsum"):
+            omega = self._worst_omega()
             if self.process is not None:
                 delta, beta = self.process.expected_delta_beta()
+                # staleness folds its bound into the compression quality
+                # (omega / (1 + tau)); matching/linkfail leave omega as-is
+                omega = self.process.effective_omega(omega)
             else:
                 delta = min(t.delta for t in self.topologies)
                 beta = max(t.beta for t in self.topologies)
-            self.gamma = theorem2_stepsize(delta, beta, self._worst_omega())
+            self.gamma = theorem2_stepsize(delta, beta, omega)
         else:
             self.gamma = 1.0
 
@@ -212,6 +225,11 @@ class DecentralizedTrainer:
         replicas = self.process is not None and self.mode == "choco"
         n_rounds = len(self.process.schedule.rounds) if replicas else 0
         matching = replicas and self.process.kind == "matching"
+        # bounded staleness (comm/async_gossip.py): x_hat is the
+        # [public copy + depth-tau own ring] list, s the [R replicas +
+        # R*tau receive rings] list
+        stale = replicas and self.process.kind == "staleness"
+        tau = self.process.max_staleness if stale else 0
         pushsum = self.mode == "pushsum"
 
         def init(key):
@@ -222,8 +240,10 @@ class DecentralizedTrainer:
                                     else p.dtype), params)
             opt = self.optimizer.init(params)
             x_hat = ([ef_zeros() for _ in range(n_rounds)] if matching
+                     else [ef_zeros() for _ in range(1 + tau)] if stale
                      else ef_zeros())
-            s = ([ef_zeros() for _ in range(n_rounds)] if n_rounds
+            s = ([ef_zeros() for _ in range(n_rounds * (1 + tau))] if stale
+                 else [ef_zeros() for _ in range(n_rounds)] if n_rounds
                  else ef_zeros())
             psw = jnp.ones((n, 1), jnp.float32) if pushsum else None
             return TrainState(params=params, x_hat=x_hat, s=s,
@@ -284,7 +304,15 @@ class DecentralizedTrainer:
             "topology_process": self.choco.topology_process,
             "edge_drop_prob": self.choco.edge_drop_prob,
             "matching_sampler": self.choco.matching_sampler,
+            "max_staleness": self._effective_staleness(),
         }
+
+    def _effective_staleness(self) -> int:
+        """Staleness bound the state layout actually depends on: tau under
+        topology_process='staleness', else 0 — so pre-staleness manifests
+        (missing key -> 0) stay resume-exact for every non-async config."""
+        return (self.choco.max_staleness
+                if self.choco.topology_process == "staleness" else 0)
 
     def save_checkpoint(self, path: str, state: TrainState,
                         metadata: Optional[dict] = None,
@@ -324,10 +352,14 @@ class DecentralizedTrainer:
         same_graph = saved_topo is None or saved_topo == self.choco.topology
         # a topology-process change re-shapes the replica state (x_hat / s
         # become per-round lists), so it takes the same re-mix path as a
-        # graph change
+        # graph change; likewise a staleness-bound change re-shapes the
+        # ring buffers (stale-buffer subtrees live under the x_hat / s
+        # reset prefixes, so the re-shaped lists restore clean)
         fp = man.fingerprint
         same_proc = (fp.get("topology_process", None)
-                     == self.choco.topology_process)
+                     == self.choco.topology_process
+                     and fp.get("max_staleness", 0)
+                     == self._effective_staleness())
         same_graph = same_graph and same_proc
         if self.mode == "pushsum" and not (same_nodes and same_graph):
             from repro.checkpoint.manifest import ElasticRestoreError
