@@ -1,0 +1,210 @@
+"""Pipelined-gossip overlap audit (EXPERIMENTS.md §Perf H).
+
+Proves — on the compiled HLO of the real qwen3-1.7b smoke train step, 8
+simulated devices — that the pipelined engine (comm/pipelined.py) removes
+the data dependency that serializes compressed communication behind the
+backward pass.
+
+The CPU backend lowers ``lax.ppermute`` to a synchronous
+``collective-permute`` (no start/done pair to place), and printed
+instruction order is not a schedule, so "how far apart are start and done"
+cannot be read off the text directly.  What CAN be read off — and is the
+scheduler-independent fact that start/done separation on an async backend
+follows from — is the DEPENDENCY structure: an async scheduler may move
+collective-start before, and collective-done after, exactly those ops that
+are not on a path to/from the collective.  So the audit computes the
+transitive operand closure of every collective-permute in the entry
+computation and counts the matmuls inside it (descending into fused/called
+computations, e.g. the transformer's scan-over-layers while loop):
+
+  * serial engine:    the payload is Q(x_half - x_hat) and x_half is
+    downstream of the gradient, so every forward/backward dot feeds the
+    collective — the wire transfer cannot begin until the backward pass
+    has finished.
+  * pipelined engine: the payload is Q(x_k - x_hat_k) from the carry, so
+    ZERO dots feed the collective — it is launchable at step start,
+    concurrent with the entire forward/backward (start and its done are
+    separable by all of the step's matmul compute).
+
+Sections:
+  * overlap_audit — dots_feeding_collective for serial vs pipelined on the
+    qwen3-1.7b smoke config, plus permute-launch parity (pipelining adds
+    zero collectives) and walltime/step.  Emits machine-readable
+    BENCH_overlap.json at the repo root so the perf trajectory is tracked
+    from PR 6 onward.
+"""
+import json
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_overlap.json")
+
+# runs inside a subprocess so the 8-device simulation never leaks
+# XLA_FLAGS into the caller
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import jax, jax.numpy as jnp
+
+    from repro.configs.base import get_config, ChocoConfig
+    from repro.models import build_model
+    from repro.train.trainer import DecentralizedTrainer
+    from repro.optim import make_optimizer, cosine_schedule
+    from repro.data.synthetic import make_lm_batch_fn
+    from repro.launch.mesh import make_mesh
+    from benchmarks.bench_overlap import audit_hlo_text
+
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    model = build_model(cfg)
+    mesh = make_mesh((8, 1), ("data", "model"))
+    nb = make_lm_batch_fn(cfg, 64, 2, 8, 1.0)
+
+    out = {}
+    for pipe in (False, True):
+        tr = DecentralizedTrainer(
+            model=model,
+            choco=ChocoConfig(compressor="top_k",
+                              comp_kwargs=(("fraction", 0.05),),
+                              gossip_axis="data", pipeline_gossip=pipe),
+            mesh=mesh, n_nodes=8, optimizer=make_optimizer("momentum"),
+            lr_fn=cosine_schedule(0.1, warmup=10, total=100), mode="choco")
+        state = tr.init_state(jax.random.PRNGKey(0))
+        batch = jax.tree.map(jnp.asarray, nb())
+        step = tr.jitted_train_step(jax.eval_shape(lambda: state),
+                                    jax.eval_shape(lambda: batch))
+        hlo = step.lower(state, batch).compile().as_text()
+        rec = audit_hlo_text(hlo)
+        state, _ = step(state, batch)          # compile + donate once
+        t0 = time.time()
+        iters = 5
+        for _ in range(iters):
+            state, mets = step(state, jax.tree.map(jnp.asarray, nb()))
+        jax.block_until_ready(state.params)
+        rec["us_per_step"] = (time.time() - t0) / iters * 1e6
+        out["pipelined" if pipe else "serial"] = rec
+    print("BENCH_OVERLAP_JSON=" + json.dumps(out))
+""")
+
+
+def _hlo_computations(hlo: str):
+    """Split HLO text into {computation_name: [instruction lines]}."""
+    comps, cur, body = {}, None, []
+    for line in hlo.splitlines():
+        if re.match(r"^\S.*\{\s*$", line):
+            cur = line.split()[0].lstrip("%")
+            if cur.startswith("ENTRY"):
+                cur = line.split()[1].lstrip("%")
+            body = comps.setdefault(cur, [])
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = body
+        elif cur is not None and line.strip() and line.strip() != "}":
+            body.append(line)
+    return comps
+
+
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
+_NAMES = re.compile(r"%([\w\.\-]+)")
+
+
+def _dots_in(comps, name, memo):
+    """Transitive dot(...) count of a computation, descending into the
+    computations it calls (fusions, while bodies, to_apply reducers)."""
+    if name in memo:
+        return memo[name]
+    memo[name] = 0          # cycle guard (HLO call graphs are acyclic)
+    total = 0
+    for line in comps.get(name, ()):
+        if "dot(" in line:
+            total += 1
+        for callee in _CALLED.findall(line):
+            total += _dots_in(comps, callee, memo)
+    memo[name] = total
+    return total
+
+
+def audit_hlo_text(hlo: str) -> dict:
+    """Dependency audit of a compiled train-step HLO module.
+
+    Returns dot counts for the whole module and for the transitive operand
+    closure of its collective-permutes: ``dots_feeding_collective`` is the
+    matmul work an async scheduler must finish BEFORE the wire transfer can
+    start — 0 means the collective is launchable at step start and its
+    start/done pair is separable by the entire forward/backward compute.
+    """
+    comps = _hlo_computations(hlo)
+    entry = comps.get("__entry__", [])
+    defs, deps, called = {}, {}, {}
+    for line in entry:
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=", line)
+        if not m:
+            continue
+        name = m.group(1)
+        defs[name] = line
+        callees = set(_CALLED.findall(line))
+        rhs = line.split("=", 1)[1]
+        deps[name] = [n for n in _NAMES.findall(rhs)
+                      if n != name and n not in callees]
+        called[name] = callees
+    permutes = [n for n, l in defs.items() if "collective-permute" in l]
+    memo = {}
+    seen, stack = set(), []
+    for p in permutes:
+        stack.extend(deps.get(p, []))
+    feeding_dots = 0
+    while stack:
+        n = stack.pop()
+        if n in seen or n not in defs:
+            continue
+        seen.add(n)
+        if "dot(" in defs[n]:
+            feeding_dots += 1
+        for c in called.get(n, ()):
+            feeding_dots += _dots_in(comps, c, memo)
+        stack.extend(deps.get(n, []))
+    total = _dots_in(comps, "__entry__", {})
+    return {"permute_launches": len(permutes),
+            "dots_total": total,
+            "dots_feeding_collective": feeding_dots}
+
+
+def overlap_audit():
+    """Run the subprocess audit and emit CSV rows + BENCH_overlap.json."""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+               + os.path.join(SRC, ".."))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1800)
+    if r.returncode != 0:
+        emit("overlap/audit", 0.0, f"ERROR:{r.stderr[-200:]}")
+        return None
+    line = [l for l in r.stdout.splitlines()
+            if l.startswith("BENCH_OVERLAP_JSON=")][-1]
+    out = json.loads(line.split("=", 1)[1])
+    for name, rec in out.items():
+        emit(f"overlap/{name}", rec["us_per_step"],
+             f"permute_launches={rec['permute_launches']};"
+             f"dots_total={rec['dots_total']};"
+             f"dots_feeding_collective={rec['dots_feeding_collective']}")
+    out["config"] = {"arch": "qwen3-1.7b-smoke", "devices": 8,
+                     "compressor": "top_k", "fraction": 0.05,
+                     "topology": "ring"}
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return out
+
+
+def run():
+    overlap_audit()
+
+
+if __name__ == "__main__":
+    run()

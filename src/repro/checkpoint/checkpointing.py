@@ -389,5 +389,7 @@ def restore_pytree(path: str, like) -> Any:
 
 
 def load_metadata(path: str) -> Dict[str, Any]:
+    """Sidecar metadata of a legacy flat .npz checkpoint (step, config);
+    sharded checkpoints carry theirs in manifest.json instead."""
     with open(re.sub(r"\.npz$", "", path) + ".meta.json") as f:
         return json.load(f)

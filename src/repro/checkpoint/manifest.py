@@ -122,10 +122,13 @@ def storage_dtype(dtype_name: str) -> str:
 
 
 def manifest_path(ckpt_dir: str) -> str:
+    """Path of the manifest.json inside a sharded checkpoint dir."""
     return os.path.join(ckpt_dir, MANIFEST_NAME)
 
 
 def is_sharded_checkpoint(path: str) -> bool:
+    """True iff path is a COMPLETE sharded checkpoint dir (the manifest is
+    renamed into place last, so a torn save answers False)."""
     return os.path.isfile(manifest_path(path))
 
 
@@ -150,6 +153,8 @@ def write_manifest(ckpt_dir: str, manifest: Manifest) -> str:
 
 
 def read_manifest(ckpt_dir: str) -> Manifest:
+    """Parse a sharded checkpoint's manifest.json; ManifestError on a
+    missing or torn (schema-invalid) manifest."""
     path = manifest_path(ckpt_dir)
     if not os.path.isfile(path):
         raise ManifestError(

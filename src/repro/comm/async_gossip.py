@@ -266,8 +266,8 @@ def make_async_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
         n *= sz
     assert process.n == n, f"process n={process.n} != mesh extent {n}"
     assert gossip_steps >= 1
-    from repro.comm.gossip import (_LazyFlatIndex, _make_compress_stage,
-                                   _pack_align)
+    from repro.comm.gossip import (_LazyFlatIndex, _ef_send_half,
+                                   _make_compress_stage, _pack_align)
     axis_arg = axes[0] if len(axes) == 1 else tuple(axes)
     align = _pack_align(compressor, pack_align)
     rounds = process.schedule.rounds
@@ -291,12 +291,8 @@ def make_async_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
         i = flat_idx()
         for t in range(gossip_steps):
             tkey = key if t == 0 else jax.random.fold_in(key, t)
-            deltas = [(a.astype(h.dtype) - h).ravel()
-                      for a, h in zip(leaves_x, hat)]
-            payloads, q_leaves, dense_fn = compress_stage(tkey, deltas, hat)
-            q_trees = [q.reshape(h.shape).astype(h.dtype)
-                       for h, q in zip(hat, q_leaves)]
-            hat = [h + q for h, q in zip(hat, q_trees)]
+            payloads, q_trees, hat, dense_fn = _ef_send_half(
+                compress_stage, tkey, leaves_x, hat)
             if tau:
                 own_ring = [q_trees] + own_ring[:-1]
             dvecs = process.round_delays(

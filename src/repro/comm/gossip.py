@@ -150,8 +150,11 @@ def _flatten_states(x_half, x_hat, s):
 
 
 def _packed_self_half(compressor, key, leaves_h, leaves_hat, spec):
-    """Shared first half of a packed choco round: deltas -> payloads,
-    per-leaf dense q, and the updated public copies x_hat."""
+    """Send half of a packed choco round: deltas -> payloads, per-leaf
+    dense q, and the updated public copies x_hat.  Factored so the serial
+    and pipelined engines share one compress stage — the receive half
+    (:func:`_neighbor_sum`) is a separate call, which keeps the collective's
+    start/done free of any data dependency the caller does not create."""
     from repro.comm.packing import compress_packed
     deltas = [(lh.astype(lhat.dtype) - lhat).ravel()
               for lh, lhat in zip(leaves_h, leaves_hat)]
@@ -161,16 +164,70 @@ def _packed_self_half(compressor, key, leaves_h, leaves_hat, spec):
     return payloads, q_leaves, new_hat
 
 
+def _per_leaf_self_half(compressor, identity, exact_small_leaves: bool,
+                        small_leaf_threshold: int, tkey, leaves_h,
+                        leaves_hat):
+    """Send half of a legacy per-leaf choco round: compress every leaf's EF
+    delta separately (tiny leaves optionally exact), advance x_hat.
+    Returns (payloads, dense_fns, q_dense, new_hat) — the per-leaf twin of
+    :func:`_packed_self_half`, shared by the serial and pipelined engines."""
+    keys = _leaf_keys(tkey, len(leaves_h), 0)
+    payloads, dense_fns, new_hat, q_dense = [], [], [], []
+    for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
+        # compress in the EF-state dtype: bf16 states -> bf16 wire
+        delta = (lh.astype(lhat.dtype) - lhat).ravel()
+        comp_i = (identity if exact_small_leaves
+                  and delta.size <= small_leaf_threshold else compressor)
+        pl, dfn = _compress_leaf(
+            comp_i, keys[i] if comp_i.stochastic else None, delta)
+        payloads.append(pl)
+        dense_fns.append(dfn)
+        qd = dfn(pl)
+        q_dense.append(qd)
+        new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
+    return payloads, dense_fns, q_dense, new_hat
+
+
 def _choco_leaf_updates(leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
                         w_self, w_nbr, gamma):
-    """Algorithm 5 lines 8-10, per leaf (elementwise; XLA fuses these)."""
+    """Algorithm 5 lines 8-10, per leaf (elementwise; XLA fuses these).
+    ``gamma`` is a scalar or a per-leaf sequence (per-bucket Theorem-2
+    stepsizes resolved by :func:`_resolve_leaf_gammas`)."""
+    gammas = _broadcast_gammas(gamma, len(leaves_h))
     new_s, new_x = [], []
-    for lh, ls, qd, nb, nh in zip(leaves_h, leaves_s, q_leaves, nbr_leaves,
-                                  new_hat):
+    for lh, ls, qd, nb, nh, g in zip(leaves_h, leaves_s, q_leaves,
+                                     nbr_leaves, new_hat, gammas):
         sn = ls + (w_self * qd + w_nbr * nb).reshape(lh.shape).astype(ls.dtype)
         new_s.append(sn)
-        new_x.append(lh + gamma * (sn - nh).astype(lh.dtype))
+        new_x.append(lh + g * (sn - nh).astype(lh.dtype))
     return new_s, new_x
+
+
+def _broadcast_gammas(gamma, n_leaves: int):
+    """Scalar gamma -> n_leaves copies; a per-leaf list passes through."""
+    if isinstance(gamma, (list, tuple)):
+        assert len(gamma) == n_leaves, (len(gamma), n_leaves)
+        return list(gamma)
+    return [gamma] * n_leaves
+
+
+def _resolve_leaf_gammas(gamma, spec, compressor: Compressor):
+    """Per-leaf consensus stepsizes for the packed engine.
+
+    A plain float is the legacy single global gamma and passes through.  A
+    :class:`~repro.core.choco_gossip.GammaSpec` derives Theorem 2 per
+    BUCKET from that bucket's own omega (each bucket is an independent
+    coordinate-wise CHOCO instance), so exact buckets (omega = 1) stop
+    being dragged down to the worst top-k bucket's contraction and vice
+    versa.  Leaves inherit their bucket's gamma, in tree_flatten order."""
+    from repro.core.choco_gossip import GammaSpec
+    if not isinstance(gamma, GammaSpec):
+        return gamma
+    from repro.comm.packing import bucket_omegas
+    omegas = bucket_omegas(spec, compressor)
+    by_bucket = [gamma.value(w) for w in omegas]
+    return [by_bucket[slot.bucket]
+            for slot in sorted(spec.slots, key=lambda sl: sl.leaf)]
 
 
 # ---------------------------------------------------------------------------
@@ -369,8 +426,14 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     In the packed engine this is a bucket-routing rule: small leaves go to a
     dense "exact" bucket instead of taking a per-leaf branch.
     """
+    from repro.core.choco_gossip import GammaSpec
     from repro.core.compression import Identity
     identity = Identity()
+    if isinstance(gamma, GammaSpec) and not packed:
+        raise ValueError(
+            "per-bucket gamma (GammaSpec) requires the packed engine: the "
+            "legacy per-leaf exchange has no bucket spec to derive omegas "
+            "from — pass a float gamma, or packed=True")
     n = 1
     for sz in sizes:
         n *= sz
@@ -393,6 +456,7 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                                 exact_small_leaves=exact_small_leaves,
                                 small_leaf_threshold=small_leaf_threshold,
                                 routes=leaf_routes)
+        gammas = _resolve_leaf_gammas(gamma, spec, compressor)
         flat_idx = _LazyFlatIndex(axes, sizes)
         for t in range(gossip_steps):
             sched, groups = compiled[t % len(compiled)]
@@ -410,7 +474,7 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
             w_self = _self_weight(sched, flat_idx)
             leaves_s, leaves_h = _choco_leaf_updates(
                 leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
-                w_self, w_nbr, gamma)
+                w_self, w_nbr, gammas)
             leaves_hat = new_hat
         unflatten = treedef.unflatten
         return unflatten(leaves_h), unflatten(leaves_hat), unflatten(leaves_s)
@@ -428,22 +492,9 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
         for t in range(gossip_steps):
             sched, groups = compiled[t % len(compiled)]
             tkey = key if t == 0 else jax.random.fold_in(key, t)
-            keys = _leaf_keys(tkey, len(leaves_h), 0)
-
-            payloads, dense_fns, new_hat, q_dense = [], [], [], []
-            for i, (lh, lhat) in enumerate(zip(leaves_h, leaves_hat)):
-                # compress in the EF-state dtype: bf16 states -> bf16 wire
-                delta = (lh.astype(lhat.dtype) - lhat).ravel()
-                comp_i = (identity if exact_small_leaves
-                          and delta.size <= small_leaf_threshold else compressor)
-                pl, dfn = _compress_leaf(
-                    comp_i, keys[i] if comp_i.stochastic else None, delta)
-                payloads.append(pl)
-                dense_fns.append(dfn)
-                qd = dfn(pl)
-                q_dense.append(qd)
-                new_hat.append(lhat + qd.reshape(lh.shape).astype(lhat.dtype))
-
+            payloads, dense_fns, q_dense, new_hat = _per_leaf_self_half(
+                compressor, identity, exact_small_leaves,
+                small_leaf_threshold, tkey, leaves_h, leaves_hat)
             if not groups:
                 nbr_sum, w_nbr = [q * 0.0 for q in q_dense], 0.0
             else:
@@ -505,6 +556,24 @@ def _make_compress_stage(compressor: Compressor, *, packed: bool, align: int,
             lambda got: [dfn(g) for dfn, g in zip(dfns, got)])
 
     return packed_stage if packed else per_leaf_stage
+
+
+def _ef_send_half(compress_stage, tkey, leaves_x, hat):
+    """Error-feedback send half shared by the replica engines: compress the
+    EF deltas against the public copies ``hat``, advance them, and return
+    the wire payloads plus the densify callback.  Factored so the send side
+    is one dependency-free block in the traced graph — the receive half is
+    whatever the engine later does with ``payloads``, which keeps the
+    collective's start/done pair separable in the compiled HLO (the
+    property the pipelined engine and benchmarks/bench_overlap.py rely on).
+    """
+    deltas = [(a.astype(h.dtype) - h).ravel()
+              for a, h in zip(leaves_x, hat)]
+    payloads, q_leaves, dense_fn = compress_stage(tkey, deltas, hat)
+    q_trees = [q.reshape(h.shape).astype(h.dtype)
+               for h, q in zip(hat, q_leaves)]
+    new_hat = [h + q for h, q in zip(hat, q_trees)]
+    return payloads, q_trees, new_hat, dense_fn
 
 
 def make_process_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
@@ -735,6 +804,7 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
                          schedules: Optional[Sequence[GossipSchedule]] = None,
                          gossip_steps: int = 1,
                          process=None,
+                         pipelined: bool = False,
                          weight_specs=None) -> Callable:
     """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
 
@@ -755,6 +825,11 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
     (comm/pushsum.py): the returned callable has the 5-ary push-sum
     signature (key, x, x_hat, s, w) -> (x, x_hat, s, w) and needs
     ``weight_specs`` (PartitionSpec of the per-node weight scalar).
+    pipelined=True (choco, static schedule only) builds the overlap engine
+    (comm/pipelined.py): identical signature and state trees, but the
+    x-update reads the PREVIOUS round's (s, x_hat) pair, so the collective
+    has no consumer in the current update and can run concurrently with
+    whatever compute the caller traces around the exchange.
     """
     axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
     sizes = tuple(mesh.shape[a] for a in axes)
@@ -807,6 +882,26 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             out_specs=(state_specs, state_specs, state_specs, weight_specs),
         )
 
+    if pipelined:
+        if mode != "choco":
+            raise ValueError(
+                f"pipelined gossip runs on the compressed choco engine only "
+                f"(mode={mode!r}): overlapping the exchange requires the "
+                f"EF-compressed increment stream whose integration can be "
+                f"deferred one round — plain/allreduce ship fresh iterates "
+                f"the update must consume immediately")
+        if process is not None:
+            raise ValueError(
+                "pipelined gossip composes a deterministic one-round delay "
+                "with a STATIC schedule; stacking it on a stochastic "
+                "topology process (whose gamma already folds its own "
+                "delay/sampling model) is unsupported — pick one")
+        if schedules is not None and len(tuple(schedules)) > 1:
+            raise ValueError(
+                "pipelined gossip supports a single static schedule: the "
+                "tau=1 gamma is derived from one delay-averaged mixing "
+                "matrix, which a time-varying sequence does not have")
+
     schedules = (tuple(schedules) if schedules
                  else _default_schedules(axes, sizes))
     if len(schedules) > 1 and gossip_steps % len(schedules) != 0:
@@ -858,7 +953,16 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             out_specs=(state_specs, hat_specs, s_specs),
         )
 
-    if mode == "choco":
+    if mode == "choco" and pipelined:
+        from repro.comm.pipelined import make_pipelined_choco_fn
+        local_fn = make_pipelined_choco_fn(
+            axes=axes, sizes=sizes, schedule=schedules[0],
+            compressor=compressor, gamma=gamma, gossip_steps=gossip_steps,
+            exact_small_leaves=exact_small_leaves,
+            small_leaf_threshold=small_leaf_threshold,
+            packed=packed, pack_align=pack_align,
+            leaf_routes=_leaf_routes(state_specs, axes))
+    elif mode == "choco":
         local_fn = make_choco_schedule_fn(
             axes=axes, sizes=sizes, schedules=schedules,
             compressor=compressor, gamma=gamma, gossip_steps=gossip_steps,

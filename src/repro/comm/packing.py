@@ -337,23 +337,34 @@ def payloads_dense_leaves(spec: BucketSpec, payloads) -> List[jax.Array]:
         spec, [bucket_dense(p, b) for p, b in zip(payloads, spec.buckets)])
 
 
-def bucket_omega_worst(spec: BucketSpec, compressor: Compressor) -> float:
-    """Worst-case (smallest) Assumption-1 omega over the spec's compressed
-    buckets.  The packed engine compresses per bucket, so the Lyapunov
-    contraction of Theorem 2 is governed by the slowest-contracting bucket —
-    this is the omega the consensus stepsize gamma* should be computed from
-    (not a fixed representative dimension).  Exact buckets ship uncompressed
-    (omega = 1) and never bind.  Sparse coordinate budgets resolve per slot,
+def bucket_omegas(spec: BucketSpec, compressor: Compressor) -> List[float]:
+    """Per-bucket Assumption-1 omega, in bucket order.  Each bucket is
+    compressed independently, so each is its own CHOCO-Gossip instance with
+    its own contraction — this is what the per-bucket Theorem-2 stepsize
+    (core.choco_gossip.GammaSpec) is evaluated against.  Exact buckets ship
+    uncompressed (omega = 1); sparse coordinate budgets resolve per slot,
     exactly as compress_bucket does."""
     omegas = []
     for b in spec.buckets:
         if b.exact or isinstance(compressor, Identity):
-            continue
-        if isinstance(compressor, (TopK, RandK)):
+            omegas.append(1.0)
+        elif isinstance(compressor, (TopK, RandK)):
             k = _slot_budget(compressor, spec.bucket_slots(b.index), b)
             omegas.append(k / b.logical)
         else:
             omegas.append(compressor.omega(b.logical))
+    return omegas
+
+
+def bucket_omega_worst(spec: BucketSpec, compressor: Compressor) -> float:
+    """Worst-case (smallest) Assumption-1 omega over the spec's compressed
+    buckets.  A single global consensus stepsize is governed by the
+    slowest-contracting bucket, so this is the omega it must be computed
+    from (not a fixed representative dimension).  Exact buckets ship
+    uncompressed (omega = 1) and never bind — unless every bucket is exact,
+    in which case omega is exactly 1."""
+    omegas = [w for b, w in zip(spec.buckets, bucket_omegas(spec, compressor))
+              if not (b.exact or isinstance(compressor, Identity))]
     return min(omegas) if omegas else 1.0
 
 

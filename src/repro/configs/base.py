@@ -233,6 +233,12 @@ class ChocoConfig:
     # fresh replica engine).  Theorem-2 gamma folds tau into omega and uses
     # the delay-averaged mixing matrix phi*W + (1-phi)*I, phi = E[1/(1+d)].
     max_staleness: int = 1
+    # pipelined engine (comm/pipelined.py): compress the PRE-gradient
+    # iterate and integrate the received payload at the NEXT step's update
+    # so the collective overlaps the backward pass (tau=1 deterministic
+    # staleness; gamma re-derived from (W+I)/2 with omega/2).  Requires
+    # mode='choco', a single static topology, and no topology_process.
+    pipeline_gossip: bool = False
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

@@ -15,6 +15,7 @@ Theorem 2: with gamma* = delta^2 omega / (16 d + d^2 + 4 b^2 + 2 d b^2 - 8 d w)
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -38,12 +39,42 @@ def theorem2_stepsize(delta: float, beta: float, omega: float) -> float:
     return float(num / den)
 
 
+@dataclasses.dataclass(frozen=True)
+class GammaSpec:
+    """Deferred Theorem-2 stepsize: (delta, beta) fixed by the mixing
+    matrix, omega supplied later — per BUCKET by the packed engine.
+
+    The consensus recursion is coordinate-wise given W, so each packed
+    bucket is an independent CHOCO-Gossip instance whose contraction is
+    governed by its OWN omega; a single global gamma derived from the worst
+    bucket (``packing.bucket_omega_worst``) needlessly throttles every
+    better-contracting bucket (an exact bucket with omega = 1 could mix an
+    order of magnitude faster than a top-0.1% bucket allows).  The trainer
+    passes a GammaSpec instead of a float and the engine evaluates
+    ``value(omega_b)`` per bucket.
+
+    ``omega_scale`` folds a process's effective-omega discount in (the
+    pipelined engine's tau=1 staleness: scale = 1/2, matching
+    ``StalenessProcess.effective_omega``); it multiplies every bucket's
+    omega before the Theorem-2 formula.
+    """
+    delta: float
+    beta: float
+    omega_scale: float = 1.0
+
+    def value(self, omega: float) -> float:
+        """gamma* for one bucket's Assumption-1 omega."""
+        return theorem2_stepsize(self.delta, self.beta,
+                                 omega * self.omega_scale)
+
+
 def theorem2_rate(delta: float, omega: float) -> float:
     """Per-round contraction factor  (1 - delta^2 omega / 82)."""
     return 1.0 - delta * delta * omega / 82.0
 
 
 def init_state(x0: jax.Array) -> GossipState:
+    """Algorithm-1 state at t=0: local iterates x0, public copies zero."""
     return GossipState(x=x0, x_hat=jnp.zeros_like(x0))
 
 
@@ -103,6 +134,7 @@ class EfficientGossipState(NamedTuple):
 
 
 def init_efficient_state(x0: jax.Array) -> EfficientGossipState:
+    """Algorithm-5 state at t=0: x0 plus zeroed x_hat and aggregate s."""
     return EfficientGossipState(x=x0, x_hat=jnp.zeros_like(x0),
                                 s=jnp.zeros_like(x0))
 
@@ -228,6 +260,74 @@ def run_choco_stale_gossip(x0: jax.Array, process, gamma: float,
 
 
 # ---------------------------------------------------------------------------
+# Pipelined gossip — matrix simulator twin of comm/pipelined.py.  The
+# pipelined engine compresses the PRE-update iterate and applies the
+# received payload at the NEXT round's update, so the mixing term always
+# reads the (s, x_hat) pair from one round ago.  That is exactly the
+# bounded-staleness recursion with a deterministic delay of 1 on every edge
+# (StalenessProcess(delay_probs=(0, 1))), but because the delay is uniform
+# and every round ships, the depth-1 rings collapse into the carry itself:
+# the stale pair IS the previous round's (s, x_hat), no replicas needed.
+# ---------------------------------------------------------------------------
+
+
+class PipelinedGossipState(NamedTuple):
+    x: jax.Array        # (n, d) local iterates
+    x_hat: jax.Array    # (n, d) public copies through round t-1
+    s: jax.Array        # (n, d) W-weighted aggregate through round t-1
+
+
+def init_pipelined_state(x0: jax.Array) -> PipelinedGossipState:
+    """Pipelined-recursion state at t=0 (zero EF state, like Algorithm 5)."""
+    return PipelinedGossipState(x=x0, x_hat=jnp.zeros_like(x0),
+                                s=jnp.zeros_like(x0))
+
+
+def choco_pipelined_round(state: PipelinedGossipState, W: jax.Array,
+                          gamma: float, compressor: Compressor,
+                          key: Optional[jax.Array] = None
+                          ) -> PipelinedGossipState:
+    """One pipelined CHOCO round — Algorithm 5 with the x-update reading the
+    carry (the round-(t-1) pair) instead of this round's integration:
+
+        q   = Q(x - x_hat)            compressed BEFORE the update
+        x' = x + gamma (s - x_hat)    stale pair: payload of round t-1
+        x_hat' = x_hat + q
+        s'     = s + W q              this round's payload lands at t+1
+
+    In the distributed engine the ``W @ q`` exchange has no consumer inside
+    the current update, which is what lets XLA overlap the collective with
+    the backward pass.  Per-step parity with the distributed engine is
+    asserted in tests/test_pipelined.py; equality with the tau=1
+    deterministic-delay stale simulator is a fast-tier test.
+    """
+    q = _rowwise_compress(compressor, key, state.x - state.x_hat)
+    x = state.x + gamma * (state.s - state.x_hat)
+    return PipelinedGossipState(x=x, x_hat=state.x_hat + q,
+                                s=state.s + W @ q)
+
+
+@partial(jax.jit, static_argnames=("compressor", "steps"))
+def run_choco_pipelined_gossip(x0: jax.Array, W: jax.Array, gamma: float,
+                               compressor: Compressor, steps: int,
+                               key: Optional[jax.Array] = None):
+    """Run `steps` pipelined rounds; returns (final state, per-step
+    consensus errors), mirroring ``run_choco_gossip_efficient``."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xbar = jnp.mean(x0, axis=0, keepdims=True)
+
+    def body(state, k):
+        new = choco_pipelined_round(state, W, gamma, compressor, k)
+        err = jnp.mean(jnp.sum((new.x - xbar) ** 2, axis=-1))
+        return new, err
+
+    keys = jax.random.split(key, steps)
+    final, errs = jax.lax.scan(body, init_pipelined_state(x0), keys)
+    return final, errs
+
+
+# ---------------------------------------------------------------------------
 # Directed push-sum (column-stochastic A) — matrix simulator twin of
 # comm/pushsum.py.  Neither x nor the weight w converges alone; the
 # de-biased ratio z = x / w does, because 1^T A = 1^T conserves both sums.
@@ -241,6 +341,7 @@ class PushSumState(NamedTuple):
 
 
 def init_pushsum_state(x0: jax.Array) -> PushSumState:
+    """Push-sum state at t=0: x0, zeroed EF state, unit weight column."""
     return PushSumState(x=x0, x_hat=jnp.zeros_like(x0),
                         s=jnp.zeros_like(x0),
                         w=jnp.ones((x0.shape[0], 1), x0.dtype))

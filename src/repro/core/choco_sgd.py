@@ -35,6 +35,8 @@ class ChocoSGDState(NamedTuple):
 
 
 def init_state(x0: jax.Array) -> ChocoSGDState:
+    """Algorithm-2 state at t=0: iterates x0, zero public copies x_hat
+    (every neighbour's view starts empty) and zero aggregates s."""
     return ChocoSGDState(x=x0, x_hat=jnp.zeros_like(x0),
                          s=jnp.zeros_like(x0), t=jnp.zeros((), jnp.int32))
 
@@ -72,6 +74,9 @@ def theorem4_lr_schedule(mu: float, a: float) -> Callable[[jax.Array], jax.Array
 
 
 def theorem4_a(delta: float, omega: float, kappa: float) -> float:
+    """Theorem 4's stepsize shift `a`: eta_t = 2 / (mu (a + t)) with
+    a = max(410 / (delta^2 omega), 16 kappa) — large enough that the first
+    steps do not outrun the consensus contraction."""
     return max(410.0 / (delta * delta * omega), 16.0 * kappa)
 
 

@@ -427,5 +427,7 @@ def compress_pytree(compressor: Compressor, key, tree):
 
 
 def decompress_pytree(payloads, treedef, shapes):
+    """Inverse of compress_pytree: densify each wire payload and restore
+    the original tree structure/leaf shapes."""
     leaves = [p.dense().reshape(s) for p, s in zip(payloads, shapes)]
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -32,6 +32,8 @@ class AveragingScheme:
 
 
 def exact_averaging(W: jax.Array, delta: float, gamma: float = 1.0) -> AveragingScheme:
+    """Uncompressed gossip baseline X <- X + gamma (W - I) X; contracts the
+    consensus error at rate p = gamma * delta per round."""
     def h(X, Y, key=None):
         Xn = X + gamma * (W - jnp.eye(W.shape[0], dtype=W.dtype)) @ X
         return Xn, Xn
@@ -41,6 +43,10 @@ def exact_averaging(W: jax.Array, delta: float, gamma: float = 1.0) -> Averaging
 def choco_averaging(W: jax.Array, delta: float, beta: float,
                     compressor: Compressor, d: int,
                     gamma: Optional[float] = None) -> AveragingScheme:
+    """CHOCO-GOSSIP (Algorithm 1) as an AveragingScheme: compressed
+    exchange with error feedback, gamma defaulting to the Theorem-2
+    stepsize for the graph's (delta, beta) and the compressor's omega at
+    dimension d; contracts at p = gamma delta omega / 2 (Theorem 2)."""
     omega = compressor.omega(d)
     if gamma is None:
         gamma = theorem2_stepsize(delta, beta, omega)

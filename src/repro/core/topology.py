@@ -195,6 +195,8 @@ def fully_connected(n: int) -> Topology:
 
 
 def chain(n: int) -> Topology:
+    """Path graph 0-1-...-(n-1): the worst-connected standard topology,
+    delta = O(1/n^2) like the ring but without the wraparound edge."""
     adj = np.zeros((n, n), dtype=int)
     for i in range(n - 1):
         adj[i, i + 1] = adj[i + 1, i] = 1
@@ -202,12 +204,16 @@ def chain(n: int) -> Topology:
 
 
 def star(n: int) -> Topology:
+    """Hub-and-spoke graph: node 0 connects to all others — constant
+    diameter but a congested hub; paper Table 1's high-degree contrast."""
     adj = np.zeros((n, n), dtype=int)
     adj[0, 1:] = adj[1:, 0] = 1
     return _from_adjacency("star", adj)
 
 
 def hypercube(n: int) -> Topology:
+    """m-dimensional hypercube on n = 2^m nodes: log-degree, log-diameter,
+    delta = O(1/log n) — the well-connected end of the paper's spectrum."""
     m = int(np.log2(n))
     if 2 ** m != n:
         raise ValueError(f"hypercube topology needs n = 2^m nodes, got n={n}; "
@@ -238,6 +244,7 @@ DIRECTED_TOPOLOGIES = frozenset({"directed_ring", "random_digraph"})
 
 
 def is_directed(name: str) -> bool:
+    """True for column-stochastic (push-sum-only) topology names."""
     return name in DIRECTED_TOPOLOGIES
 
 
@@ -266,6 +273,8 @@ def _torus_factors(n: int) -> Tuple[int, int]:
 
 
 def make_topology(name: str, n: int) -> Topology:
+    """Build a registered topology by name at n nodes (registry keys
+    mirror launch.train.TOPOLOGY_CHOICES)."""
     if name not in _TOPOLOGIES:
         raise ValueError(f"unknown topology {name!r}; have {sorted(_TOPOLOGIES)}")
     return _TOPOLOGIES[name](n)

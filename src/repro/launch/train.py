@@ -77,6 +77,13 @@ def main(argv=None):
                          "staleness: per-edge payload delays are sampled "
                          "uniformly from {0..tau} (default 1; tau=0 is the "
                          "always-fresh replica engine)")
+    ap.add_argument("--pipeline-gossip", action="store_true",
+                    help="pipelined CHOCO engine (comm/pipelined.py): "
+                         "compress the pre-gradient iterate and integrate "
+                         "the received payload at the NEXT step's update so "
+                         "the collective overlaps the backward pass (tau=1 "
+                         "staleness gamma); requires --mode choco, a single "
+                         "static --topology, and no --topology-process")
     ap.add_argument("--gossip-steps", type=int, default=1,
                     help="CHOCO gossip rounds per SGD step (k>1 trades wire "
                          "bytes for consensus; one pack amortizes the k "
@@ -186,6 +193,22 @@ def main(argv=None):
         if args.max_staleness < 0:
             ap.error(f"--max-staleness must be >= 0, got "
                      f"{args.max_staleness}")
+    if args.pipeline_gossip:
+        if args.mode != "choco":
+            ap.error(f"--pipeline-gossip hides the COMPRESSED exchange "
+                     f"behind the backward pass via the error-feedback "
+                     f"carry; --mode {args.mode} has no (x_hat, s) state to "
+                     f"double-buffer — it requires --mode choco")
+        if args.topology_process != "none":
+            ap.error(f"--pipeline-gossip is itself a deterministic delay-1 "
+                     f"staleness process; stacking --topology-process "
+                     f"{args.topology_process} on top compounds two delay "
+                     f"models with no Theorem-2 gamma for the composite")
+        if len(topo_names) > 1:
+            ap.error(f"--pipeline-gossip needs one static schedule: a "
+                     f"payload compressed under graph W_k but integrated a "
+                     f"step later under W_k+1 breaks the recursion (got "
+                     f"--topology {args.topology!r})")
     if args.keep_checkpoints is not None:
         if args.keep_checkpoints < 1:
             ap.error(f"--keep-checkpoints must be >= 1, got "
@@ -222,6 +245,7 @@ def main(argv=None):
     model = build_model(cfg)
     proc_info = ("" if args.topology_process == "none" else
                  f" process={args.topology_process}")
+    proc_info += " pipelined" if args.pipeline_gossip else ""
     print(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
           f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"nodes={n_nodes} mode={args.mode} topology={args.topology} "
@@ -249,7 +273,8 @@ def main(argv=None):
                           matching_sampler=(args.matching_sampler or "uniform"),
                           max_staleness=(args.max_staleness
                                          if args.max_staleness is not None
-                                         else 1)),
+                                         else 1),
+                          pipeline_gossip=args.pipeline_gossip),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),

@@ -19,7 +19,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ChocoConfig, parse_topology
 from repro.core.compression import make_compressor
-from repro.core.choco_gossip import theorem2_stepsize
+from repro.core.choco_gossip import GammaSpec, theorem2_stepsize
 from repro.core.topology import is_directed, make_topology, torus2d
 from repro.comm.gossip import make_gossip_exchange
 from repro.comm.schedule import compile_directed_schedule, compile_schedules
@@ -146,23 +146,69 @@ class DecentralizedTrainer:
                 max_staleness=self.choco.max_staleness)
         else:
             self.process = None
+        # pipelined engine (comm/pipelined.py): the exchange is issued on
+        # the PRE-gradient iterate and its payload lands in the NEXT step's
+        # update — validity requires the compressed-increment recursion
+        # (choco), a single static graph, and no stochastic process (the
+        # tau=1 delay surrogate below IS this engine's process)
+        if self.choco.pipeline_gossip:
+            if self.mode != "choco":
+                raise ValueError(
+                    f"pipeline_gossip hides the COMPRESSED exchange behind "
+                    f"the backward pass via the error-feedback recursion; "
+                    f"mode={self.mode!r} has no (x_hat, s) carry to "
+                    f"double-buffer — it requires mode='choco'")
+            if self.process is not None:
+                raise ValueError(
+                    f"pipeline_gossip is itself a deterministic delay-1 "
+                    f"staleness process; stacking topology_process="
+                    f"{self.choco.topology_process!r} on top would compound "
+                    f"two delay models with no Theorem-2 gamma for the "
+                    f"composite — run one or the other")
+            if len(self.schedules) > 1:
+                raise ValueError(
+                    f"pipeline_gossip needs one static schedule: a payload "
+                    f"compressed under graph W_k but integrated a step "
+                    f"later under W_{{k+1}} breaks the recursion (got "
+                    f"time-varying topology={self.choco.topology!r})")
         # Theorem-2 consensus stepsize from the topology and compression;
         # a time-varying sequence takes the conservative worst case, a
         # stochastic process the EXPECTED mixing matrix's (delta, beta)
         # (Koloskova et al. 2020 analyze exactly that quantity)
+        self.gamma_spec = None
         if self.choco.consensus_gamma is not None:
             self.gamma = self.choco.consensus_gamma
         elif self.mode in ("choco", "pushsum"):
             omega = self._worst_omega()
+            omega_scale = 1.0
             if self.process is not None:
                 delta, beta = self.process.expected_delta_beta()
                 # staleness folds its bound into the compression quality
                 # (omega / (1 + tau)); matching/linkfail leave omega as-is
                 omega = self.process.effective_omega(omega)
+            elif self.choco.pipeline_gossip:
+                # tau=1 surrogate: every payload is exactly one round late,
+                # so (delta, beta) come from E_eff = (W + I) / 2 and the
+                # staleness bound folds omega -> omega / 2
+                from repro.comm.pipelined import pipeline_delay_process
+                surrogate = pipeline_delay_process(self.schedules[0])
+                delta, beta = surrogate.expected_delta_beta()
+                omega_scale = 0.5
+                omega = surrogate.effective_omega(omega)
             else:
                 delta = min(t.delta for t in self.topologies)
                 beta = max(t.beta for t in self.topologies)
             self.gamma = theorem2_stepsize(delta, beta, omega)
+            # per-bucket Theorem-2 gamma (packed engine): ship the (delta,
+            # beta, omega_scale) recipe instead of the worst-case scalar so
+            # each bucket contracts at ITS omega — exact buckets stop being
+            # dragged to the top-k stepsize.  self.gamma stays the scalar
+            # worst case for logging and the per-leaf/pushsum engines;
+            # single-bucket specs resolve to exactly that scalar.
+            if (self.mode == "choco" and self.process is None
+                    and self.choco.packed_gossip):
+                self.gamma_spec = GammaSpec(delta=delta, beta=beta,
+                                            omega_scale=omega_scale)
         else:
             self.gamma = 1.0
 
@@ -186,7 +232,8 @@ class DecentralizedTrainer:
         # engine compresses one tree's worth of deltas per round either way
         hat_shape = (shape.x_hat[0] if isinstance(shape.x_hat, (list, tuple))
                      else shape.x_hat)
-        local = [jax.ShapeDtypeStruct(self._local_shape(l.shape, sp), l.dtype)
+        local = [jax.ShapeDtypeStruct(
+                     _local_shape(l.shape, sp, dict(self.mesh.shape)), l.dtype)
                  for l, sp in zip(jax.tree.leaves(hat_shape), spec_leaves)]
         spec = make_bucket_spec(
             local, align=_pack_align(self.compressor, self.choco.pack_align),
@@ -194,20 +241,6 @@ class DecentralizedTrainer:
             small_leaf_threshold=self.choco.small_leaf_threshold,
             routes=_leaf_routes(specs, self.gossip_axis))
         return bucket_omega_worst(spec, self.compressor)
-
-    def _local_shape(self, shape, sp) -> Tuple[int, ...]:
-        """Per-shard leaf shape under a PartitionSpec — what the exchange's
-        bucket spec actually sees inside shard_map."""
-        dims = list(shape)
-        if isinstance(sp, P):
-            for i, entry in enumerate(sp):
-                if entry is None:
-                    continue
-                f = 1
-                for a in (entry if isinstance(entry, tuple) else (entry,)):
-                    f *= self.mesh.shape[a]
-                dims[i] = max(1, dims[i] // f)
-        return tuple(dims)
 
     # -- state ----------------------------------------------------------------
 
@@ -300,6 +333,16 @@ class DecentralizedTrainer:
             "gossip_steps": int(self.choco.gossip_steps),
             "mode": self.mode,
             "compressor": self.choco.compressor,
+            # hyperparameters behind the name: a resumed run with a
+            # different fraction / qsgd_s has a different Assumption-1
+            # omega, so its EF state and Theorem-2 gamma are NOT the
+            # checkpoint's — restore routes mismatches through the elastic
+            # re-mix path.  Packing knobs change the bucket spec the
+            # per-bucket gammas are derived from, so they count too.
+            "compressor_config": dict(self.choco.comp_dict()),
+            "packed_gossip": bool(self.choco.packed_gossip),
+            "pack_align": self.choco.pack_align,
+            "pipeline_gossip": bool(self.choco.pipeline_gossip),
             "state_dtype": self.choco.state_dtype,
             "topology_process": self.choco.topology_process,
             "edge_drop_prob": self.choco.edge_drop_prob,
@@ -360,7 +403,23 @@ class DecentralizedTrainer:
                      == self.choco.topology_process
                      and fp.get("max_staleness", 0)
                      == self._effective_staleness())
-        same_graph = same_graph and same_proc
+        # compression / packing fingerprint: the EF state (x_hat, s) and
+        # gamma were built under the checkpoint's omega — a changed
+        # compression ratio or bucket layout re-mixes like a graph change.
+        # Every key compares with missing-key-matches (.get with the
+        # CURRENT value as default) so pre-PR-6 manifests stay resume-exact.
+        same_comp = (fp.get("compressor", self.choco.compressor)
+                     == self.choco.compressor
+                     and fp.get("compressor_config", self.choco.comp_dict())
+                     == self.choco.comp_dict()
+                     and fp.get("packed_gossip", self.choco.packed_gossip)
+                     == bool(self.choco.packed_gossip)
+                     and fp.get("pack_align", self.choco.pack_align)
+                     == self.choco.pack_align
+                     and fp.get("pipeline_gossip",
+                                self.choco.pipeline_gossip)
+                     == bool(self.choco.pipeline_gossip))
+        same_graph = same_graph and same_proc and same_comp
         if self.mode == "pushsum" and not (same_nodes and same_graph):
             from repro.checkpoint.manifest import ElasticRestoreError
             raise ElasticRestoreError(
@@ -418,6 +477,46 @@ class DecentralizedTrainer:
     def make_train_step(self):
         model, opt, lr_fn = self.model, self.optimizer, self.lr_fn
         pushsum = self.mode == "pushsum"
+        pipelined = self.choco.pipeline_gossip and self.mode == "choco"
+
+        def pipelined_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+            # Two-phase carry (comm/pipelined.py).  Phase A traces the
+            # round-k exchange FIRST, on the PRE-gradient iterate: its
+            # ppermute payload is Q(x_k - x_hat_k) and its output
+            # gx = x_k + gamma (s_k - x_hat_k) consumes only last round's
+            # carry — nothing downstream of the batch.  Phase B (grad +
+            # optimizer half-step) therefore shares no data dependency
+            # with the collective, and XLA overlaps the transfer with the
+            # backward matmuls (benchmarks/bench_overlap.py audits this).
+            gkey = jax.random.fold_in(state.key, state.step)
+            exchange = self._exchange(state.params)
+            gx, new_hat, new_s = exchange(gkey, state.params,
+                                          state.x_hat, state.s)
+
+            def loss_fn(p, b):
+                loss, metrics = model.loss(p, b)
+                return loss, metrics
+            (losses, metrics), grads = jax.vmap(
+                jax.value_and_grad(loss_fn, has_aux=True))(state.params, batch)
+            lr = lr_fn(state.step)
+            x_half, new_opt = opt.update(state.params, grads, state.opt, lr)
+
+            # merge the independent halves elementwise:
+            #   x_{k+1} = x_k - lr g + gamma (s_k - x_hat_k)
+            #           = gx + (x_half - x_k)
+            new_params = jax.tree.map(lambda g, xh, x: g + (xh - x),
+                                      gx, x_half, state.params)
+            out = TrainState(params=new_params, x_hat=new_hat, s=new_s,
+                             opt=new_opt, step=state.step + 1, key=state.key,
+                             psw=state.psw)
+            mets = {"loss": jnp.mean(losses), "lr": lr,
+                    "grad_norm": _global_norm(grads)}
+            for k, v in metrics.items():
+                mets[k] = jnp.mean(v)
+            return out, mets
+
+        if pipelined:
+            return pipelined_step
 
         def train_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
             # 1. per-node stochastic gradient (no cross-node collectives).
@@ -467,9 +566,11 @@ class DecentralizedTrainer:
         specs = param_pspecs(params_shape, self.model.cfg,
                              node_axis=self.gossip_axis, fsdp_axis=self.fsdp_axis,
                              model_size=0)
+        gamma = (self.gamma_spec if self.gamma_spec is not None
+                 else self.gamma)
         return make_gossip_exchange(
             mode=self.mode, mesh=self.mesh, state_specs=specs,
-            axis=self.gossip_axis, compressor=self.compressor, gamma=self.gamma,
+            axis=self.gossip_axis, compressor=self.compressor, gamma=gamma,
             exact_small_leaves=self.choco.exact_small_leaves,
             small_leaf_threshold=self.choco.small_leaf_threshold,
             packed=self.choco.packed_gossip,
@@ -477,6 +578,7 @@ class DecentralizedTrainer:
             schedules=self.schedules,
             gossip_steps=self.choco.gossip_steps,
             process=self.process,
+            pipelined=self.choco.pipeline_gossip,
             weight_specs=(P(self.gossip_axis, None)
                           if self.mode == "pushsum" else None))
 
@@ -494,6 +596,37 @@ class DecentralizedTrainer:
                        in_shardings=(shard(state_specs), shard(bspecs)),
                        out_shardings=(shard(state_specs), None),
                        donate_argnums=(0,))
+
+
+def _global_shape_error(shape, sp, axes, dim, extent):
+    return ValueError(
+        f"leaf of global shape {tuple(shape)} cannot be sharded by "
+        f"PartitionSpec {sp}: dim {dim} of size {shape[dim]} is not "
+        f"divisible by the mesh extent {extent} of axes {axes} — a floored "
+        f"local size would mis-derive the bucket spec and its Theorem-2 "
+        f"omega.  Pad the dimension to a multiple of {extent} or change "
+        f"the partitioning.")
+
+
+def _local_shape(shape, sp, mesh_axis_sizes) -> Tuple[int, ...]:
+    """Per-shard leaf shape under a PartitionSpec — what the exchange's
+    bucket spec actually sees inside shard_map.  Raises on non-divisible
+    partitioning: XLA would pad such shards, so silently flooring here
+    hands the bucket-spec builder (and the omega / gamma derivation built
+    on it) a local size the engine never actually sees."""
+    dims = list(shape)
+    if isinstance(sp, P):
+        for i, entry in enumerate(sp):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            f = 1
+            for a in axes:
+                f *= mesh_axis_sizes[a]
+            if f > 1 and dims[i] % f != 0:
+                raise _global_shape_error(shape, sp, axes, i, f)
+            dims[i] //= f
+    return tuple(dims)
 
 
 def _global_norm(tree):

@@ -180,6 +180,9 @@ class TestSeedReproducibility:
 # ---------------------------------------------------------------------------
 
 class TestStaleSimulator:
+    # 250 delay-expanded rounds x 8 graph/tau combos ~= 50s: slow tier
+    # (fast-tier stale signal stays via test_average_preserved_exactly)
+    @pytest.mark.slow
     @pytest.mark.parametrize("name", ["ring", "hypercube", "star", "torus"])
     @pytest.mark.parametrize("tau", [1, 2])
     def test_consensus_converges(self, name, tau, key):

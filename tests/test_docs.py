@@ -3,8 +3,9 @@
 Three contracts:
   * every relative markdown link in README / docs/ / EXPERIMENTS / ROADMAP
     resolves to a real file;
-  * every public symbol in the ``comm/`` package (and each module itself)
-    carries a docstring — the comm layer is the repo's primary API surface;
+  * every public symbol in the ``comm/``, ``core/`` and ``checkpoint/``
+    packages (and each module itself) carries a docstring — the layers the
+    README points readers at first;
   * the README fail-fast matrix IS the launcher's behaviour: every row is
     run verbatim through ``launch/train.py`` and must exit pre-jax with
     SystemExit(2), and every CLI choice the launcher accepts
@@ -55,16 +56,18 @@ def test_markdown_links_resolve():
     assert not broken, f"broken relative links: {broken}"
 
 
-def test_comm_public_api_has_docstrings():
+@pytest.mark.parametrize("package", ["comm", "core", "checkpoint"])
+def test_public_api_has_docstrings(package):
     """Module docstrings + docstrings on every public class/function defined
-    in comm/ (imported symbols are the defining module's responsibility)."""
+    in the package (imported symbols are the defining module's
+    responsibility)."""
     import importlib
     import pkgutil
 
-    import repro.comm
+    pkg = importlib.import_module(f"repro.{package}")
     missing = []
-    for info in pkgutil.iter_modules(repro.comm.__path__):
-        mod = importlib.import_module(f"repro.comm.{info.name}")
+    for info in pkgutil.iter_modules(pkg.__path__):
+        mod = importlib.import_module(f"repro.{package}.{info.name}")
         if not (mod.__doc__ or "").strip():
             missing.append(f"{mod.__name__} (module)")
         for name, obj in vars(mod).items():
@@ -76,7 +79,8 @@ def test_comm_public_api_has_docstrings():
                 continue
             if not (inspect.getdoc(obj) or "").strip():
                 missing.append(f"{mod.__name__}.{name}")
-    assert not missing, f"public comm symbols without docstrings: {missing}"
+    assert not missing, \
+        f"public {package} symbols without docstrings: {missing}"
 
 
 def _failfast_rows():

@@ -26,7 +26,14 @@ def _batch(cfg):
     return {"tokens": toks, "labels": toks}
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# the two recurrent-family smokes (mamba/rwkv scans) dominate fast-tier
+# walltime — slow tier; every other family stays fast
+_SLOW_SMOKES = {"zamba2-1.2b", "rwkv6-3b"}
+
+
+@pytest.mark.parametrize("arch", [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_SMOKES else a
+    for a in ARCH_IDS])
 def test_smoke_forward_and_train_step(arch):
     """One forward + one SGD train step on the reduced config; asserts output
     shapes and no NaNs (assignment requirement)."""

@@ -230,6 +230,9 @@ class TestSeedReproducibility:
 # ---------------------------------------------------------------------------
 
 class TestProcessSimulator:
+    # 250 sampled rounds x 8 graph/process combos ~= 2.5 min: slow tier
+    # (fast-tier mixing signal stays via test_matching_beats_nothing_baseline)
+    @pytest.mark.slow
     @pytest.mark.parametrize("name", ["ring", "hypercube", "star", "torus"])
     @pytest.mark.parametrize("kind", ["matching", "linkfail"])
     def test_consensus_converges(self, name, kind, key):
@@ -261,6 +264,8 @@ class TestProcessSimulator:
         _, errs = run_choco_gossip_process(x0, proc, 0.4, Identity(), 150)
         assert float(errs[-1]) < 0.05 * float(errs[0])
 
+    # 150 sampled Algorithm-4 rounds per kind ~= 18s: slow tier
+    @pytest.mark.slow
     @pytest.mark.parametrize("kind", ["matching", "linkfail"])
     def test_blackbox_averaging_scheme_contracts(self, kind, key):
         """Algorithm-4 composition point (core/consensus.py): the stochastic
