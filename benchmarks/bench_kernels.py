@@ -7,9 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from .common import time_fn, emit
-
-HBM_BW = 819e9
+from .common import HBM_BW, time_fn, emit
 
 
 def run():
@@ -21,13 +19,15 @@ def run():
     us = time_fn(f, x, xi)
     bytes_moved = d * 4 * 2 + d          # read x, xi; write int8
     emit("kernels/qsgd_quantize_ref", us,
-         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f};"
+         f"hbm_bw={HBM_BW:.0f}")
 
     f = jax.jit(lambda a: ref.block_topk_mask_ref(a, 13))
     us = time_fn(f, x)
     bytes_moved = d * 4 * 2
     emit("kernels/block_topk_ref", us,
-         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f};"
+         f"hbm_bw={HBM_BW:.0f}")
 
     args = [jax.random.normal(jax.random.PRNGKey(i), (d // 128, 128))
             for i in range(5)]
@@ -35,7 +35,8 @@ def run():
     us = time_fn(f, *args)
     bytes_moved = d * 4 * 8              # 5 reads + 3 writes
     emit("kernels/ef_gossip_update_ref", us,
-         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f}")
+         f"d={d};tpu_roofline_us={bytes_moved / HBM_BW * 1e6:.1f};"
+         f"hbm_bw={HBM_BW:.0f}")
 
     B, S, H, Dh = 1, 1024, 4, 128
     q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, Dh)) * 0.3

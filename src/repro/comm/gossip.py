@@ -149,16 +149,20 @@ def _flatten_states(x_half, x_hat, s):
     return leaves_h, leaves_hat, leaves_s, treedef
 
 
-def _packed_self_half(compressor, key, leaves_h, leaves_hat, spec):
+def _packed_self_half(compressor, key, leaves_h, leaves_hat, spec,
+                      backend: str = "jnp"):
     """Send half of a packed choco round: deltas -> payloads, per-leaf
     dense q, and the updated public copies x_hat.  Factored so the serial
     and pipelined engines share one compress stage — the receive half
     (:func:`_neighbor_sum`) is a separate call, which keeps the collective's
-    start/done free of any data dependency the caller does not create."""
+    start/done free of any data dependency the caller does not create.
+    ``backend`` is the resolved kernel backend for the quantize math
+    (kernels/dispatch.py); both backends produce identical wire bytes."""
     from repro.comm.packing import compress_packed
     deltas = [(lh.astype(lhat.dtype) - lhat).ravel()
               for lh, lhat in zip(leaves_h, leaves_hat)]
-    payloads, q_leaves = compress_packed(compressor, key, spec, deltas)
+    payloads, q_leaves = compress_packed(compressor, key, spec, deltas,
+                                         backend=backend)
     new_hat = [lhat + q.reshape(lh.shape).astype(lhat.dtype)
                for lh, lhat, q in zip(leaves_h, leaves_hat, q_leaves)]
     return payloads, q_leaves, new_hat
@@ -211,23 +215,46 @@ def _broadcast_gammas(gamma, n_leaves: int):
     return [gamma] * n_leaves
 
 
-def _resolve_leaf_gammas(gamma, spec, compressor: Compressor):
-    """Per-leaf consensus stepsizes for the packed engine.
-
-    A plain float is the legacy single global gamma and passes through.  A
-    :class:`~repro.core.choco_gossip.GammaSpec` derives Theorem 2 per
-    BUCKET from that bucket's own omega (each bucket is an independent
+def _resolve_bucket_gammas(gamma, spec, compressor: Compressor):
+    """Per-BUCKET consensus stepsizes, in bucket order.  A plain float
+    broadcasts; a :class:`~repro.core.choco_gossip.GammaSpec` derives
+    Theorem 2 from each bucket's own omega (each bucket is an independent
     coordinate-wise CHOCO instance), so exact buckets (omega = 1) stop
     being dragged down to the worst top-k bucket's contraction and vice
-    versa.  Leaves inherit their bucket's gamma, in tree_flatten order."""
+    versa.  Consumed directly by the fused bucket-space EF path."""
+    from repro.core.choco_gossip import GammaSpec
+    if not isinstance(gamma, GammaSpec):
+        return [gamma] * spec.n_buckets
+    from repro.comm.packing import bucket_omegas
+    omegas = bucket_omegas(spec, compressor)
+    return [gamma.value(w) for w in omegas]
+
+
+def _resolve_leaf_gammas(gamma, spec, compressor: Compressor):
+    """Per-leaf consensus stepsizes for the packed engine: each leaf
+    inherits its bucket's gamma (:func:`_resolve_bucket_gammas`), in
+    tree_flatten order.  A plain float passes through unchanged."""
     from repro.core.choco_gossip import GammaSpec
     if not isinstance(gamma, GammaSpec):
         return gamma
-    from repro.comm.packing import bucket_omegas
-    omegas = bucket_omegas(spec, compressor)
-    by_bucket = [gamma.value(w) for w in omegas]
+    by_bucket = _resolve_bucket_gammas(gamma, spec, compressor)
     return [by_bucket[slot.bucket]
             for slot in sorted(spec.slots, key=lambda sl: sl.leaf)]
+
+
+def _fused_update_ok(spec, leaves_h, leaves_s) -> bool:
+    """Whether the fused bucket-space EF path applies: every bucket buffer,
+    every packed slot, and every (x, s) state leaf must already be float32.
+    Then pack/unpack are pure copies (no dtype rounding), bucket-space
+    subtraction commutes with packing, and the fused path computes the
+    exact per-leaf update algebra on the bucket buffers.  Mixed-precision
+    EF states (bf16 x_hat) keep the leaf path, with the pallas backend
+    still fusing the quantize."""
+    f32 = jnp.dtype(jnp.float32)
+    return (all(jnp.dtype(b.dtype) == f32 for b in spec.buckets)
+            and all(jnp.dtype(sl.dtype) == f32 for sl in spec.slots)
+            and all(jnp.dtype(l.dtype) == f32 for l in leaves_h)
+            and all(jnp.dtype(l.dtype) == f32 for l in leaves_s))
 
 
 # ---------------------------------------------------------------------------
@@ -400,7 +427,8 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                            small_leaf_threshold: int = 8_192,
                            packed: bool = True,
                            pack_align: Optional[int] = None,
-                           leaf_routes: Optional[list] = None) -> Callable:
+                           leaf_routes: Optional[list] = None,
+                           kernel_backend: str = "jnp") -> Callable:
     """Returns local_fn(key, x_half, x_hat, s) -> (x, x_hat, s) for shard_map.
 
     Implements, per local shard and ``gossip_steps`` times per call
@@ -425,6 +453,22 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     adding top-k latency; beyond-paper toggle, off for paper-faithful runs.
     In the packed engine this is a bucket-routing rule: small leaves go to a
     dense "exact" bucket instead of taking a per-leaf branch.
+
+    kernel_backend: the RESOLVED backend ("jnp"/"pallas") from
+    kernels/dispatch.py — resolution (auto probing, toolchain gating)
+    happens in :func:`make_gossip_exchange`; this builder only consumes
+    the decision.  With "pallas" and all-f32 EF state the packed engine
+    switches to the fused bucket-space path: state lives in bucket buffers
+    across all gossip_steps, each round issues ONE fused quantize launch
+    and ONE fused EF-update launch per bucket (kernels/qsgd.py +
+    kernels/ef_update.py) instead of 8 full-size jnp streams per leaf,
+    and leaves are unpacked once at the end.  Parity contract with the
+    jnp path: identical wire payloads (same codes, same scales — the
+    norm reductions and float associations match exactly) and identical
+    x_hat; the x/s iterates agree up to FMA-contraction rounding (the
+    backends compile structurally different graphs, so LLVM/XLA may
+    contract different mul+add pairs — ulp-level, asserted in
+    tests/test_fused.py).
     """
     from repro.core.choco_gossip import GammaSpec
     from repro.core.compression import Identity
@@ -445,8 +489,10 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     compiled = [(sch, _weight_groups(sch)) for sch in schedules]
 
     def packed_local_fn(key, x_half, x_hat, s):
-        from repro.comm.packing import (bucket_dense, make_bucket_spec,
+        from repro.comm.packing import (bucket_dense, compress_bufs,
+                                        make_bucket_spec, pack_leaves,
                                         unpack_leaves)
+        from repro.kernels import dispatch as kdispatch
         # distinct randomness per gossip node and per model/fsdp shard
         for a in axes:
             key = jax.random.fold_in(key, jax.lax.axis_index(a))
@@ -456,18 +502,61 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                                 exact_small_leaves=exact_small_leaves,
                                 small_leaf_threshold=small_leaf_threshold,
                                 routes=leaf_routes)
-        gammas = _resolve_leaf_gammas(gamma, spec, compressor)
         flat_idx = _LazyFlatIndex(axes, sizes)
+        unflatten = treedef.unflatten
+        dense_fn = lambda got: [bucket_dense(g, b) for g, b
+                                in zip(got, spec.buckets)]
+
+        if (kernel_backend == "pallas"
+                and _fused_update_ok(spec, leaves_h, leaves_s)):
+            # fused bucket-space path: pack the three state trees ONCE,
+            # run every gossip round on the bucket buffers (one fused
+            # quantize launch + one fused EF-update launch per bucket),
+            # unpack once at the end.  Padding is exactly preserved: it
+            # starts 0 in every buffer, deltas/q/neighbour sums are 0
+            # there, and the EF update maps (0,0,0,0,0) -> (0,0,0).
+            bucket_gammas = _resolve_bucket_gammas(gamma, spec, compressor)
+            shapes = [lh.shape for lh in leaves_h]
+            h_bufs = pack_leaves(spec, leaves_h)
+            hat_bufs = pack_leaves(spec, leaves_hat)
+            s_bufs = pack_leaves(spec, leaves_s)
+            for t in range(gossip_steps):
+                sched, groups = compiled[t % len(compiled)]
+                tkey = key if t == 0 else jax.random.fold_in(key, t)
+                d_bufs = [hb - hatb for hb, hatb in zip(h_bufs, hat_bufs)]
+                payloads, q_bufs = compress_bufs(compressor, tkey, spec,
+                                                 d_bufs, backend="pallas")
+                if not groups:                 # n == 1: no neighbours
+                    nbr_bufs, w_nbr = [q * 0.0 for q in q_bufs], 0.0
+                else:
+                    nbr_bufs, w_nbr = _neighbor_sum(
+                        payloads, groups, axis_arg, dense_fn, flat_idx)
+                w_self = _self_weight(sched, flat_idx)
+                for b in range(spec.n_buckets):
+                    h_bufs[b], hat_bufs[b], s_bufs[b] = \
+                        kdispatch.ef_bucket_update(
+                            h_bufs[b], hat_bufs[b], s_bufs[b],
+                            q_bufs[b], nbr_bufs[b], w_self, w_nbr,
+                            bucket_gammas[b], backend="pallas")
+            leaves_h = [f.reshape(sh) for f, sh
+                        in zip(unpack_leaves(spec, h_bufs), shapes)]
+            leaves_hat = [f.reshape(sh) for f, sh
+                          in zip(unpack_leaves(spec, hat_bufs), shapes)]
+            leaves_s = [f.reshape(sh) for f, sh
+                        in zip(unpack_leaves(spec, s_bufs), shapes)]
+            return (unflatten(leaves_h), unflatten(leaves_hat),
+                    unflatten(leaves_s))
+
+        gammas = _resolve_leaf_gammas(gamma, spec, compressor)
         for t in range(gossip_steps):
             sched, groups = compiled[t % len(compiled)]
             tkey = key if t == 0 else jax.random.fold_in(key, t)
             payloads, q_leaves, new_hat = _packed_self_half(
-                compressor, tkey, leaves_h, leaves_hat, spec)
+                compressor, tkey, leaves_h, leaves_hat, spec,
+                backend=kernel_backend)
             if not groups:                     # n == 1: no neighbours
                 nbr_leaves, w_nbr = [q * 0.0 for q in q_leaves], 0.0
             else:
-                dense_fn = lambda got: [bucket_dense(g, b) for g, b
-                                        in zip(got, spec.buckets)]
                 nbr_bufs, w_nbr = _neighbor_sum(payloads, groups, axis_arg,
                                                 dense_fn, flat_idx)
                 nbr_leaves = unpack_leaves(spec, nbr_bufs)
@@ -476,7 +565,6 @@ def make_choco_schedule_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                 leaves_h, leaves_s, q_leaves, nbr_leaves, new_hat,
                 w_self, w_nbr, gammas)
             leaves_hat = new_hat
-        unflatten = treedef.unflatten
         return unflatten(leaves_h), unflatten(leaves_hat), unflatten(leaves_s)
 
     if packed:
@@ -805,7 +893,8 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
                          gossip_steps: int = 1,
                          process=None,
                          pipelined: bool = False,
-                         weight_specs=None) -> Callable:
+                         weight_specs=None,
+                         kernel_backend: str = "auto") -> Callable:
     """Build the jit-able exchange: (key, x_half, x_hat, s) -> (x, x_hat, s).
 
     axis: one mesh axis name, or a tuple of axis names whose row-major
@@ -830,7 +919,18 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
     x-update reads the PREVIOUS round's (s, x_hat) pair, so the collective
     has no consumer in the current update and can run concurrently with
     whatever compute the caller traces around the exchange.
+    kernel_backend: "auto" (default) probes the toolchain and picks the
+    Pallas kernels when they can run compiled on this jax/backend
+    (kernels/dispatch.py); "pallas"/"jnp" force.  Only the packed static
+    choco engines (serial + pipelined) are pallas-eligible — forcing
+    "pallas" elsewhere raises.  Backends ship identical wire bytes and
+    identical x_hat; x/s agree to FMA-contraction rounding (see
+    make_choco_schedule_fn).
     """
+    from repro.kernels import dispatch as kdispatch
+    engine_eligible = (mode == "choco" and packed and process is None)
+    resolved_backend = kdispatch.resolve_backend(
+        kernel_backend, engine_eligible=engine_eligible)
     axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
     sizes = tuple(mesh.shape[a] for a in axes)
     n = 1
@@ -961,7 +1061,8 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             exact_small_leaves=exact_small_leaves,
             small_leaf_threshold=small_leaf_threshold,
             packed=packed, pack_align=pack_align,
-            leaf_routes=_leaf_routes(state_specs, axes))
+            leaf_routes=_leaf_routes(state_specs, axes),
+            kernel_backend=resolved_backend)
     elif mode == "choco":
         local_fn = make_choco_schedule_fn(
             axes=axes, sizes=sizes, schedules=schedules,
@@ -969,7 +1070,8 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
             exact_small_leaves=exact_small_leaves,
             small_leaf_threshold=small_leaf_threshold,
             packed=packed, pack_align=pack_align,
-            leaf_routes=_leaf_routes(state_specs, axes))
+            leaf_routes=_leaf_routes(state_specs, axes),
+            kernel_backend=resolved_backend)
     elif mode == "plain":
         local_fn = make_plain_schedule_fn(axes=axes, sizes=sizes,
                                           schedules=schedules,
@@ -980,8 +1082,15 @@ def make_gossip_exchange(*, mode: str, mesh, state_specs, axis,
     else:
         raise ValueError(mode)
 
+    smap_kwargs = {}
+    if (resolved_backend == "pallas"
+            and not kdispatch.shard_map_check_rep("pallas")):
+        # jax 0.4.x shard_map has no replication rule for pallas_call;
+        # the exchange's specs carry no replicated outputs anyway
+        smap_kwargs["check_rep"] = False
     return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), state_specs, state_specs, state_specs),
         out_specs=(state_specs, state_specs, state_specs),
+        **smap_kwargs,
     )

@@ -46,6 +46,7 @@ from repro.core.compression import (BlockTopK, Compressor, DensePayload,
                                     Identity, PackedQuantPayload,
                                     PackedSparsePayload, QSGD, RandK,
                                     SignNorm, SparsePayload, TopK, _resolve_k)
+from repro.kernels import dispatch as kdispatch
 
 LANES = 128
 #: default cap on bucket size — same constant the per-leaf path used for
@@ -227,20 +228,27 @@ def _logical_positions(slots, bucket: Bucket) -> jax.Array:
 
 def compress_bucket(compressor: Compressor, key, buf: jax.Array,
                     bucket: Bucket,
-                    slots: Optional[Sequence[LeafSlot]] = None):
+                    slots: Optional[Sequence[LeafSlot]] = None,
+                    *, backend: str = "jnp"):
     """Compress one packed bucket buffer into a single wire payload.
 
     slots: the bucket's LeafSlots — lets sparse operators resolve their
     coordinate budget per leaf (matching the per-leaf path) and sample over
     logical positions only (never the alignment padding).
 
+    backend: the resolved kernel backend ("jnp"/"pallas",
+    kernels/dispatch.py) for the elementwise quantize math.  Only QSGD
+    and SignNorm have a fused kernel; both backends are bit-exact, so
+    the wire payload is identical either way.
+
     Dispatches to the block-kernel paths (one launch per bucket):
       * BlockTopK  -> batched blockwise top-k  (kernels/ops.block_topk_select)
       * TopK       -> one global lax.top_k with k resolved from the bucket's
                       logical size (sum of leaf sizes, padding excluded)
       * RandK      -> per-slot budget, sampled over logical positions only
-      * QSGD       -> the int8 quantize math of kernels/qsgd.py (ref-exact
-                      jnp inline) + a scale using the *logical* dim's tau
+      * QSGD       -> the int8/int16 quantize codes of kernels/qsgd.py
+                      (fused pallas launch or the ref-exact jnp inline)
+                      + a scale using the *logical* dim's tau
       * SignNorm   -> int8 sign codes + logical-mean scale
       * Identity / exact buckets -> the dense buffer itself
     Anything else falls back to the compressor's own flat compress() over
@@ -274,10 +282,10 @@ def compress_bucket(compressor: Compressor, key, buf: jax.Array,
         _, idx = jax.lax.top_k(jnp.abs(buf), k)
         return SparsePayload(buf[idx], idx.astype(jnp.int32), buf.size)
     if isinstance(compressor, QSGD):
-        # same math as the Pallas int8 tiles (kernels/qsgd.py == ref.py
-        # bit-exactly); inlined as jnp here because pallas_call has no
-        # shard_map replication rule on jax 0.4.x.  Padding quantizes to
-        # zero codes (|0|*s/norm + xi < 1 floors to 0 for xi in [0,1)).
+        # elementwise codes via kernels/dispatch.py (fused pallas launch
+        # or the bit-exact jnp inline); the norm reduction stays here, on
+        # the unpadded buffer, so both backends share it exactly.  Padding
+        # quantizes to zero codes (|0|*s/norm + xi < 1 floors to 0).
         s = compressor.s
         x32 = buf.astype(jnp.float32)
         xi = jax.random.uniform(key, buf.shape)
@@ -285,9 +293,7 @@ def compress_bucket(compressor: Compressor, key, buf: jax.Array,
         inv_norm = jnp.where(norm == 0, 0.0, 1.0 / norm)
         # levels naturally bound by s (|x|/norm <= 1); int16 above s=127
         # exactly like QSGD.compress — int8 would silently halve large coords
-        level = jnp.floor(jnp.abs(x32) * inv_norm * s + xi)
-        ctype = jnp.int8 if s <= 127 else jnp.int16
-        codes = (jnp.sign(x32) * level).astype(ctype)
+        codes = kdispatch.qsgd_codes(x32, xi, inv_norm, s, backend=backend)
         # scale with the logical dimension's tau: zero padding contributes
         # nothing to the norm but would inflate tau if counted in d
         tau = compressor._tau(bucket.logical) if compressor.rescale else 1.0
@@ -298,7 +304,7 @@ def compress_bucket(compressor: Compressor, key, buf: jax.Array,
     if isinstance(compressor, SignNorm):
         x32 = buf.astype(jnp.float32)
         scale = jnp.sum(jnp.abs(x32)) / bucket.logical
-        return PackedQuantPayload(jnp.sign(x32).astype(jnp.int8),
+        return PackedQuantPayload(kdispatch.sign_codes(x32, backend=backend),
                                   scale.astype(jnp.float32), 1,
                                   dim=bucket.size, logical=bucket.logical)
     return compressor.compress(key, buf)
@@ -312,22 +318,40 @@ def bucket_dense(payload, bucket: Bucket) -> jax.Array:
     return q[: bucket.size].astype(bucket.dtype)
 
 
-def compress_packed(compressor: Compressor, key, spec: BucketSpec,
-                    flat_leaves: Sequence[jax.Array]):
-    """pack -> compress (once per bucket).  Returns (payloads, q_leaves):
-    one payload per bucket plus the dense per-leaf q (for the local EF
-    update), so local and remote integration use the SAME quantized values.
+def compress_bufs(compressor: Compressor, key, spec: BucketSpec,
+                  bufs: Sequence[jax.Array], *, backend: str = "jnp"):
+    """Compress already-packed bucket buffers.  Returns (payloads, q_bufs):
+    one wire payload per bucket plus its dense q padded back to the full
+    buffer length — the bucket-space twin of :func:`compress_packed`, used
+    directly by the fused EF path (which keeps state in bucket space).
+
+    Key salting is per bucket (``fold_in(key, bucket.index)``) for
+    stochastic compressors on compressed buckets — identical to
+    :func:`compress_packed`, so both paths draw the same wire bits.
     """
-    bufs = pack_leaves(spec, flat_leaves)
     payloads = []
     for bucket, buf in zip(spec.buckets, bufs):
         bkey = (jax.random.fold_in(key, bucket.index)
                 if (compressor.stochastic and key is not None
                     and not bucket.exact) else None)
         payloads.append(compress_bucket(compressor, bkey, buf, bucket,
-                                        spec.bucket_slots(bucket.index)))
-    q_leaves = unpack_leaves(
-        spec, [bucket_dense(p, b) for p, b in zip(payloads, spec.buckets)])
+                                        spec.bucket_slots(bucket.index),
+                                        backend=backend))
+    q_bufs = [bucket_dense(p, b) for p, b in zip(payloads, spec.buckets)]
+    return payloads, q_bufs
+
+
+def compress_packed(compressor: Compressor, key, spec: BucketSpec,
+                    flat_leaves: Sequence[jax.Array], *,
+                    backend: str = "jnp"):
+    """pack -> compress (once per bucket).  Returns (payloads, q_leaves):
+    one payload per bucket plus the dense per-leaf q (for the local EF
+    update), so local and remote integration use the SAME quantized values.
+    """
+    bufs = pack_leaves(spec, flat_leaves)
+    payloads, q_bufs = compress_bufs(compressor, key, spec, bufs,
+                                     backend=backend)
+    q_leaves = unpack_leaves(spec, q_bufs)
     return payloads, q_leaves
 
 

@@ -90,7 +90,8 @@ def make_pipelined_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
                             small_leaf_threshold: int = 8_192,
                             packed: bool = True,
                             pack_align: Optional[int] = None,
-                            leaf_routes: Optional[list] = None) -> Callable:
+                            leaf_routes: Optional[list] = None,
+                            kernel_backend: str = "jnp") -> Callable:
     """Returns local_fn(key, x, x_hat, s) -> (x, x_hat, s) for shard_map —
     same signature and state trees as the static choco engine, implementing
     the pipelined recursion of the module docstring ``gossip_steps`` times.
@@ -103,6 +104,13 @@ def make_pipelined_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
     ordering differs.  ``gamma`` may be a float or a
     :class:`~repro.core.choco_gossip.GammaSpec` (per-bucket Theorem-2
     stepsizes, packed engine only).
+
+    kernel_backend: resolved backend for the COMPRESS stage only
+    (kernels/dispatch.py, threaded to ``_packed_self_half``).  The fused
+    bucket-space EF path does not apply here: the pipelined x-update reads
+    the PRE-round (s, x_hat) carry, not the freshly integrated pair the
+    fused kernel produces, so pallas fuses the quantize and the update
+    stays the leaf-wise jnp recursion above (bit-exact either way).
     """
     from repro.comm.gossip import (_LazyFlatIndex, _broadcast_gammas,
                                    _choco_leaf_updates, _flatten_states,
@@ -143,7 +151,8 @@ def make_pipelined_choco_fn(*, axes: Tuple[str, ...], sizes: Tuple[int, ...],
         for t in range(gossip_steps):
             tkey = key if t == 0 else jax.random.fold_in(key, t)
             payloads, q_leaves, new_hat = _packed_self_half(
-                compressor, tkey, leaves_x, leaves_hat, spec)
+                compressor, tkey, leaves_x, leaves_hat, spec,
+                backend=kernel_backend)
             if not groups:                     # n == 1: no neighbours
                 nbr_leaves, w_nbr = [q * 0.0 for q in q_leaves], 0.0
             else:

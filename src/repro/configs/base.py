@@ -239,6 +239,12 @@ class ChocoConfig:
     # staleness; gamma re-derived from (W+I)/2 with omega/2).  Requires
     # mode='choco', a single static topology, and no topology_process.
     pipeline_gossip: bool = False
+    # kernel backend for the gossip hot path (kernels/dispatch.py):
+    # 'auto' probes the toolchain and picks the fused Pallas kernels when
+    # they can run compiled (TPU), 'pallas'/'jnp' force.  Never part of the
+    # checkpoint fingerprint: flipping it changes neither the state layout
+    # nor the wire bytes, so resumes are backend-portable.
+    kernel_backend: str = "auto"
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

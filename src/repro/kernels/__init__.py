@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the gossip hot path, with pure-jnp oracles.
+
+Layout (the xformers-style kernel/reference discipline):
+
+* ``qsgd.py`` / ``topk.py`` / ``ef_update.py`` / ``flash_attention.py``
+  — tiled Pallas kernels for the bandwidth-bound stages (quantize to
+  wire codes, block top-k mask, fused CHOCO error-feedback update,
+  attention).
+* ``ops.py`` — jit'd shape-polymorphic wrappers over flat vectors
+  (pad + reshape to (rows, 128) tiles internally).
+* ``ref.py`` — bit-exact pure-jnp oracles; every kernel is held to
+  parity with its oracle in ``tests/test_kernels.py``.
+* ``dispatch.py`` — backend resolution (``auto``/``pallas``/``jnp``)
+  and the fused entry points the packed gossip engine calls.
+
+OPTIONAL layer by repo convention: add kernels only for compute
+hot-spots the reproduction actually optimizes.
+"""

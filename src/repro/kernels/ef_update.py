@@ -7,8 +7,14 @@ Unfused, XLA may issue it as several passes; this kernel does one
 HBM->VMEM->HBM sweep per tile:
 
     x_hat' = x_hat + q_self
-    s'     = s + w_self q_self + w_nbr q_nbr
+    s'     = s + (w_self q_self + w_nbr q_nbr)
     x'     = x_half + gamma (s' - x_hat')
+
+The s' parenthesization is load-bearing: it matches the association the
+engine's jnp leaf path uses (comm/gossip.py::_choco_leaf_updates), and
+XLA does not reassociate floats — so any residual cross-backend
+difference is FMA-contraction rounding at fusion boundaries (ulp-level,
+bounded in tests/test_fused.py), never association drift.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ def _ef_kernel(xh_ref, xhat_ref, s_ref, qs_ref, qn_ref, coef_ref,
     gamma = coef_ref[2]
     q_self = qs_ref[...]
     xhat_n = xhat_ref[...] + q_self
-    s_n = s_ref[...] + w_self * q_self + w_nbr * qn_ref[...]
+    s_n = s_ref[...] + (w_self * q_self + w_nbr * qn_ref[...])
     x_out[...] = xh_ref[...] + gamma * (s_n - xhat_n)
     xhat_out[...] = xhat_n
     s_out[...] = s_n

@@ -27,7 +27,7 @@ def _from_tiles(t, d):
 
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
 def qsgd_compress_vector(x, xi, s: int, *, interpret: bool = True):
-    """Flat qsgd: x, xi (d,) -> (codes int8 (d,), scale)."""
+    """Flat qsgd: x, xi (d,) -> (codes int8/int16 (d,), scale)."""
     xt, d = _to_tiles(x)
     xit, _ = _to_tiles(xi)
     codes, scale = qsgd_quantize(xt, xit, s, interpret=interpret)
@@ -36,6 +36,7 @@ def qsgd_compress_vector(x, xi, s: int, *, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def qsgd_decompress_vector(codes, scale, *, interpret: bool = True):
+    """Flat qsgd dequantize: codes (d,), scale scalar -> f32 (d,)."""
     ct, d = _to_tiles(codes)
     return _from_tiles(qsgd_dequantize(ct, scale, interpret=interpret), d)
 
@@ -51,10 +52,13 @@ def block_topk_compress_vector(x, k_per_block: int, *, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("k_per_block", "block"))
 def block_topk_select(x, k_per_block: int, *, block: int = 128):
-    """Flat blockwise top-k *payload extraction*: one batched launch for the
-    whole vector, the compact counterpart of ``block_topk_mask`` (same
-    selection rule; the mask kernel produces the dense masked q on TPU, this
-    produces the static-shape wire payload).
+    """Flat blockwise top-k *payload extraction* — the pure-jnp REFERENCE
+    path (``lax.top_k`` + gather, no Pallas kernel behind it).  It shares
+    the selection rule with the ``block_topk_mask`` kernel, but where the
+    mask kernel produces the dense masked q in one tiled pass, this emits
+    the compact static-shape (values, indices) wire payload, which needs a
+    gather the TPU kernel does not attempt; it stays jnp under every
+    ``kernels/dispatch.py`` backend.
 
     x: (d,) -> (values (R, k), indices (R, k) int32) with R = ceil(d/block);
     the tail block is zero-padded, so padded positions carry zero values.

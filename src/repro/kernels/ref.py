@@ -10,17 +10,27 @@ import jax.numpy as jnp
 # -- qsgd ---------------------------------------------------------------------
 
 def qsgd_quantize_ref(x, xi, s: int):
+    """Quantize oracle: int8 codes for s <= 127, int16 above (the
+    ``packing.compress_bucket`` wire format).  No clip — |x| <= ||x||
+    already bounds every level by s."""
     norm = jnp.sqrt(jnp.sum(jnp.square(x)))
     inv_norm = jnp.where(norm == 0, 0.0, 1.0 / norm)
-    level = jnp.clip(jnp.floor(jnp.abs(x) * inv_norm * s + xi), 0.0, 127.0)
-    codes = (jnp.sign(x) * level).astype(jnp.int8)
+    level = jnp.floor(jnp.abs(x) * inv_norm * s + xi)
+    ctype = jnp.int8 if s <= 127 else jnp.int16
+    codes = (jnp.sign(x) * level).astype(ctype)
     d = x.size
     tau = 1.0 + min(d / (s * s), math.sqrt(d) / s)
     return codes, (norm / (s * tau)).astype(jnp.float32)
 
 
 def qsgd_dequantize_ref(codes, scale):
+    """Dequantize oracle: codes * scale in f32."""
     return codes.astype(jnp.float32) * scale
+
+
+def signnorm_codes_ref(x):
+    """SignNorm wire-code oracle: int8 sign(x)."""
+    return jnp.sign(x).astype(jnp.int8)
 
 
 # -- block top-k --------------------------------------------------------------
@@ -53,11 +63,13 @@ def block_topk_mask_ref(x, k: int, n_iter: int = 24):
 def ef_gossip_update_ref(x_half, x_hat, s, q_self, q_nbr, w_self, w_nbr, gamma):
     """CHOCO state update (Algorithm 6 lines 8-10), fused:
         x_hat' = x_hat + q_self
-        s'     = s + w_self * q_self + w_nbr * q_nbr
+        s'     = s + (w_self * q_self + w_nbr * q_nbr)
         x'     = x_half + gamma * (s' - x_hat')
-    All arrays same shape; q_nbr is the (already summed) neighbour payload."""
+    All arrays same shape; q_nbr is the (already summed) neighbour payload.
+    The s' association matches the engine's jnp path exactly (floats do
+    not reassociate under XLA) — that is the bit-exactness contract."""
     x_hat_n = x_hat + q_self
-    s_n = s + w_self * q_self + w_nbr * q_nbr
+    s_n = s + (w_self * q_self + w_nbr * q_nbr)
     x_n = x_half + gamma * (s_n - x_hat_n)
     return x_n, x_hat_n, s_n
 

@@ -98,6 +98,14 @@ def main(argv=None):
                     choices=["packed", "per-leaf"],
                     help="bucketed flat-buffer exchange (default) vs legacy "
                          "per-leaf compress+ppermute")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "pallas", "jnp"],
+                    help="kernel backend for the gossip hot path "
+                         "(kernels/dispatch.py): 'auto' probes the "
+                         "toolchain and uses the fused Pallas kernels when "
+                         "they run compiled (TPU), 'pallas'/'jnp' force; "
+                         "pallas requires --mode choco with the packed "
+                         "engine and no --topology-process")
     ap.add_argument("--exact-small-leaves", action="store_true",
                     help="route leaves <= 8192 elems to the uncompressed "
                          "exact bucket (norm scales, biases)")
@@ -209,6 +217,30 @@ def main(argv=None):
                      f"payload compressed under graph W_k but integrated a "
                      f"step later under W_k+1 breaks the recursion (got "
                      f"--topology {args.topology!r})")
+    if args.kernel_backend == "pallas":
+        # mirror kernels/dispatch.py's engine-eligibility rule pre-jax so a
+        # bad launch dies in argparse, not after devices initialise
+        if args.mode != "choco":
+            ap.error(f"--kernel-backend pallas fuses the CHOCO "
+                     f"quantize/error-feedback hot path; --mode {args.mode} "
+                     f"never runs it — drop the flag or use --mode choco")
+        if args.gossip_engine != "packed":
+            ap.error("--kernel-backend pallas requires the packed engine "
+                     "(the kernels run on bucket buffers); drop "
+                     "--gossip-engine per-leaf")
+        if args.topology_process != "none":
+            ap.error(f"--kernel-backend pallas runs on the static choco "
+                     f"engines only; --topology-process "
+                     f"{args.topology_process} uses the replica/async "
+                     f"engines, which stay jnp")
+        # jax-free version gate (kernels/dispatch.py reads package metadata)
+        from repro.kernels.dispatch import (MIN_JAX_FOR_PALLAS,
+                                            jax_version_tuple)
+        if jax_version_tuple() < MIN_JAX_FOR_PALLAS:
+            ap.error(f"--kernel-backend pallas needs jax >= "
+                     f"{'.'.join(map(str, MIN_JAX_FOR_PALLAS))} "
+                     f"(found {'.'.join(map(str, jax_version_tuple()))}); "
+                     f"use --kernel-backend auto or jnp")
     if args.keep_checkpoints is not None:
         if args.keep_checkpoints < 1:
             ap.error(f"--keep-checkpoints must be >= 1, got "
@@ -274,7 +306,8 @@ def main(argv=None):
                           max_staleness=(args.max_staleness
                                          if args.max_staleness is not None
                                          else 1),
-                          pipeline_gossip=args.pipeline_gossip),
+                          pipeline_gossip=args.pipeline_gossip,
+                          kernel_backend=args.kernel_backend),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),

@@ -580,7 +580,8 @@ class DecentralizedTrainer:
             process=self.process,
             pipelined=self.choco.pipeline_gossip,
             weight_specs=(P(self.gossip_axis, None)
-                          if self.mode == "pushsum" else None))
+                          if self.mode == "pushsum" else None),
+            kernel_backend=self.choco.kernel_backend)
 
     # -- jit with shardings -----------------------------------------------------
 

@@ -56,7 +56,8 @@ def test_markdown_links_resolve():
     assert not broken, f"broken relative links: {broken}"
 
 
-@pytest.mark.parametrize("package", ["comm", "core", "checkpoint"])
+@pytest.mark.parametrize("package", ["comm", "core", "checkpoint",
+                                     "kernels"])
 def test_public_api_has_docstrings(package):
     """Module docstrings + docstrings on every public class/function defined
     in the package (imported symbols are the defining module's

@@ -161,3 +161,170 @@ def test_flash_attention_softcap_and_bf16():
                                     v.astype(jnp.float32), causal=True, softcap=30.0)
     np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(o_ref),
                                rtol=0.1, atol=0.02)
+
+# -- wire-format parity: int8/int16 codes vs the packing wire format -----------
+
+@pytest.mark.parametrize("s", [1, 127, 128, 255])
+def test_qsgd_codes_wire_dtype(s):
+    """compress_bucket's wire rule: int8 codes up to s=127, int16 above
+    (int8 would silently clamp large coordinates)."""
+    from repro.kernels.qsgd import code_dtype, qsgd_quantize_codes
+    x = _tiles(3, 8, scale=2.0)
+    xi = jax.random.uniform(jax.random.PRNGKey(4), (8, 128))
+    want = jnp.int8 if s <= 127 else jnp.int16
+    assert code_dtype(s) == want
+    norm = jnp.sqrt(jnp.sum(jnp.square(x)))
+    codes = qsgd_quantize_codes(x, xi, 1.0 / norm, s)
+    assert codes.dtype == want
+    ref_codes, _ = jax.jit(ref.qsgd_quantize_ref,
+                           static_argnames="s")(x, xi, s)
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(ref_codes))
+    # extreme levels actually reached: one coordinate carries the whole norm
+    spike = jnp.zeros((8, 128)).at[0, 0].set(3.0)
+    codes = qsgd_quantize_codes(spike, jnp.zeros((8, 128)), 1.0 / 3.0, s)
+    assert int(codes[0, 0]) == s
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 3000), st.sampled_from([1, 16, 127, 255]),
+       st.integers(0, 10 ** 6))
+def test_qsgd_codes_pallas_matches_jitted_ref_hypothesis(d, s, seed):
+    """Odd sizes + padding tails: pallas(interpret) codes over the padded
+    tiles slice back to exactly the JITTED ref codes of the flat vector.
+    Bit-exact comparisons are always against the jitted ref: the engine
+    runs compiled, and eager jnp rounds FMA differently."""
+    from repro.kernels import dispatch as kd
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    xi = jax.random.uniform(jax.random.PRNGKey(seed + 1), (d,))
+    norm = jnp.sqrt(jnp.sum(jnp.square(x)))
+    inv_norm = jnp.where(norm == 0, 0.0, 1.0 / norm)
+    got = kd.qsgd_codes(x, xi, inv_norm, s, backend="pallas")
+    want = jax.jit(
+        lambda x, xi: (jnp.sign(x)
+                       * jnp.floor(jnp.abs(x) * inv_norm * s + xi)
+                       ).astype(jnp.int8 if s <= 127 else jnp.int16))(x, xi)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qsgd_codes_zero_norm_bucket():
+    """All-zero bucket: inv_norm = 0 must code to all-zero (both backends)."""
+    from repro.kernels import dispatch as kd
+    x = jnp.zeros((901,))
+    xi = jax.random.uniform(jax.random.PRNGKey(2), (901,))
+    for backend in ("jnp", "pallas"):
+        codes = kd.qsgd_codes(x, xi, jnp.float32(0.0), 16, backend=backend)
+        assert int(jnp.sum(jnp.abs(codes))) == 0
+
+
+def test_sign_codes_parity():
+    from repro.kernels import dispatch as kd
+    x = jax.random.normal(jax.random.PRNGKey(5), (777,))
+    want = jax.jit(ref.signnorm_codes_ref)(x)
+    for backend in ("jnp", "pallas"):
+        got = kd.sign_codes(x, backend=backend)
+        assert got.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qsgd_dequantize_bit_exact():
+    codes = jnp.asarray(
+        jax.random.randint(KEY, (8, 128), -127, 128), jnp.int8)
+    scale = jnp.float32(0.037)
+    got = qsgd_dequantize(codes, scale)
+    want = jax.jit(ref.qsgd_dequantize_ref)(codes, scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_block_topk_mask_bit_exact_vs_jitted_ref():
+    x = _tiles(9, 16, scale=2.0)
+    mk, tk = block_topk_mask(x, 13)
+    mr, tr = jax.jit(ref.block_topk_mask_ref, static_argnames="k")(x, k=13)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 4000), st.integers(0, 10 ** 6))
+def test_ef_update_pallas_bit_exact_vs_jitted_ref(d, seed):
+    """Fused EF kernel == JITTED oracle, bitwise, on odd flat sizes (the
+    padded tail stays exactly zero and is sliced off)."""
+    args = [jax.random.normal(jax.random.PRNGKey(seed + i), (d,))
+            for i in range(5)]
+    got = ops.ef_gossip_update_vector(*args, 1 / 3, 1 / 3, 0.046)
+    want = jax.jit(ref.ef_gossip_update_ref)(*args, 1 / 3, 1 / 3, 0.046)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ef_bucket_update_backends_match():
+    from repro.kernels import dispatch as kd
+    d = 1536
+    args = [jax.random.normal(jax.random.PRNGKey(10 + i), (d,))
+            for i in range(5)]
+    outs = {bk: jax.jit(lambda *a, bk=bk: kd.ef_bucket_update(
+                *a, 1 / 3, 1 / 3, 0.046, backend=bk))(*args)
+            for bk in ("jnp", "pallas")}
+    for a, b in zip(outs["jnp"], outs["pallas"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- dispatch ------------------------------------------------------------------
+
+def test_resolve_backend_rules():
+    from repro.kernels import dispatch as kd
+    assert kd.resolve_backend("auto") in ("pallas", "jnp")
+    assert kd.resolve_backend("jnp") == "jnp"
+    with pytest.raises(ValueError):
+        kd.resolve_backend("vulkan")
+    with pytest.raises(ValueError):
+        kd.resolve_backend("pallas", engine_eligible=False)
+    # auto on an ineligible engine silently stays jnp (never raises)
+    assert kd.resolve_backend("auto", engine_eligible=False) == "jnp"
+    assert kd.jax_version_tuple() >= (0, 4)
+
+
+def test_auto_never_picks_interpret_pallas():
+    """'auto' selects pallas only where the kernels run compiled; on the
+    CPU test toolchain (interpret-only) it must resolve to jnp."""
+    from repro.kernels import dispatch as kd
+    tc = kd.probe_toolchain()
+    if tc.interpret:
+        assert kd.resolve_backend("auto") == "jnp"
+    else:
+        assert kd.resolve_backend("auto") == "pallas"
+
+
+def test_dispatch_single_node_exchange_backends_agree():
+    """Forced jnp vs forced pallas on a 2-bucket spec (in-process, 1-node
+    mesh): identical round-1 wire state x_hat (bitwise) and ulp-close x/s
+    through the fused bucket-space path.  One round only — later rounds
+    quantize the ulp-drifted x, so x_hat stays bit-exact only for the
+    round whose input state is shared (the wire witness)."""
+    import numpy as onp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.comm.gossip import make_gossip_exchange
+    from repro.core.compression import QSGD
+
+    mesh = Mesh(onp.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    params = {"a": jax.random.normal(jax.random.PRNGKey(1), (1, 300)),
+              "b": jax.random.normal(jax.random.PRNGKey(2), (1, 4, 128))}
+    specs = {"a": P("data", None), "b": P("data", None, "model")}
+    outs = {}
+    for bk in ("jnp", "pallas"):
+        with mesh:
+            ex = jax.jit(make_gossip_exchange(
+                mode="choco", mesh=mesh, state_specs=specs, axis="data",
+                compressor=QSGD(s=16), gamma=0.3, gossip_steps=1,
+                kernel_backend=bk))
+        outs[bk] = ex(jax.random.PRNGKey(3), params,
+                      jax.tree.map(jnp.zeros_like, params),
+                      jax.tree.map(jnp.zeros_like, params))
+    for j, tol in ((0, 1e-6), (1, 0.0), (2, 1e-6)):   # x, x_hat, s
+        for k in params:
+            a = np.asarray(outs["jnp"][j][k])
+            b = np.asarray(outs["pallas"][j][k])
+            if tol == 0.0:
+                np.testing.assert_array_equal(a, b)
+            else:
+                np.testing.assert_allclose(a, b, rtol=0, atol=tol)
