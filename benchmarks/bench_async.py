@@ -32,6 +32,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def staleness_rate():
+    """Consensus error vs staleness bound tau on ring/torus."""
     comp = TopK(k=64)
     gamma = 0.25
     x0 = jax.random.normal(jax.random.PRNGKey(0), (N, D))
@@ -52,6 +53,8 @@ def staleness_rate():
 
 
 def hlo_audit():
+    """Permute-launch parity audit: async engine vs linkfail baseline,
+    checked in-subprocess against the choco_staleness registry entry."""
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -63,11 +66,13 @@ def hlo_audit():
         from repro.comm.async_gossip import StalenessProcess
         from repro.comm.stochastic import LinkFailureProcess
         from repro.core import make_topology, TopK
+        from repro.analysis.hlo_audit import count_permute_launches
+        from repro.analysis.invariants import (CONTEXT_VARS,
+                                               assert_invariant)
 
         def permutes(ex, *args):
             hlo = jax.jit(ex).lower(*args).compile().as_text()
-            return sum(1 for l in hlo.splitlines()
-                       if "collective-permute" in l and "-done" not in l)
+            return count_permute_launches(hlo)
 
         n, d = 8, 4096
         sched = compile_schedule(make_topology("ring", n))
@@ -90,9 +95,15 @@ def hlo_audit():
                                       state_specs=P("data", None),
                                       axis="data", compressor=comp,
                                       gamma=0.3, process=sp)
-            out[f"async_tau{tau}"] = permutes(
+            n_tau = permutes(
                 ex, k, x0, [z() for _ in range(1 + tau)],
                 [z() for _ in range(R * (1 + tau))])
+            # registered contract: staleness adds ZERO permute launches
+            # over the link-failure baseline
+            assert_invariant("choco_staleness", "jnp",
+                             {"permute_launches": n_tau},
+                             dict(CONTEXT_VARS, baseline=n_lf))
+            out[f"async_tau{tau}"] = n_tau
         print(json.dumps(out))
     """)
     env = dict(os.environ, PYTHONPATH=SRC)
@@ -113,6 +124,7 @@ def hlo_audit():
 
 
 def run():
+    """Benchmark entry point (python -m benchmarks.run)."""
     staleness_rate()
     hlo_audit()
 

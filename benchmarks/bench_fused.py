@@ -15,10 +15,14 @@ simulated devices:
     CPU and is unrepresentative of the TPU lowering, so the fused path
     is audited STRUCTURALLY: the jaxpr is walked for ``pallas_call``
     launches (asserted == n_buckets x 2 per round: one fused
-    quantize+pack, one fused dequant+EF-update) and the kernel + glue
-    streams are itemized analytically per bucket (delta/xi/norm/dense
-    glue in jnp, 2 reads + 1 code write in the quantize kernel, 5 reads
-    + 3 writes in the EF kernel).
+    quantize+pack, one fused dequant+EF-update — the registered
+    choco_serial/pallas invariant in repro.analysis.invariants) and the
+    kernel + glue streams are itemized analytically per bucket
+    (delta/xi/norm/dense glue in jnp, 2 reads + 1 code write in the
+    quantize kernel, 5 reads + 3 writes in the EF kernel).
+
+The HLO/jaxpr parsers live in ``repro.analysis.hlo_audit`` /
+``repro.analysis.jaxpr_audit`` (shared with tests and the lint CLI).
 
 Both engines run in the same subprocess and the parity contract is
 asserted on real arrays: identical round-1 x_hat (the wire-payload
@@ -27,94 +31,16 @@ root (schema in the JSON itself) plus CSV rows.
 """
 import json
 import os
-import re
 import subprocess
 import sys
 import textwrap
+
+from repro.analysis.hlo_audit import STREAM_THRESHOLD
 
 from .common import HBM_BW, emit
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_fused.json")
-
-#: f32 tensors at or above this many elements count as full-size streams
-#: (the gossip state buckets are hundreds of KB; scalars/scales are not)
-STREAM_THRESHOLD = 1 << 14
-
-_SHAPE = re.compile(r"\bf32\[([\d,]*)\]")
-
-
-def _elems(dims: str) -> int:
-    total = 1
-    for d in dims.split(","):
-        if d:
-            total *= int(d)
-    return total
-
-
-def stream_audit_hlo(hlo: str, threshold: int = STREAM_THRESHOLD) -> dict:
-    """Count full-size f32 streams in the ENTRY computation of an HLO
-    module: defs are writes, operands are reads (both post-fusion, i.e.
-    actual HBM traffic under XLA's fusion model).  Parameter declarations
-    and tuple plumbing define no stream; their tensors are counted where
-    an instruction actually consumes them."""
-    entry, depth, in_entry = [], 0, False
-    for line in hlo.splitlines():
-        if line.startswith("ENTRY"):
-            in_entry = True
-            depth = 0
-        if in_entry:
-            depth += line.count("{") - line.count("}")
-            entry.append(line)
-            if depth <= 0 and "}" in line:
-                break
-    reads = writes = read_bytes = write_bytes = 0
-    for line in entry[1:]:
-        s = line.strip()
-        if not s or s == "}" or "parameter(" in s \
-                or s.startswith(("ROOT %tuple", "ROOT tuple")) \
-                or "get-tuple-element" in s:
-            continue
-        shapes = _SHAPE.findall(s)
-        if not shapes or "=" not in s:
-            continue
-        d = _elems(shapes[0])
-        if d >= threshold:
-            writes += 1
-            write_bytes += d * 4
-        for dims in shapes[1:]:
-            d = _elems(dims)
-            if d >= threshold:
-                reads += 1
-                read_bytes += d * 4
-    return {"streams": reads + writes, "reads": reads, "writes": writes,
-            "bytes": read_bytes + write_bytes}
-
-
-def count_pallas_calls(jaxpr) -> int:
-    """Recursively count pallas_call equations in a (closed) jaxpr."""
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                total += count_pallas_calls(sub)
-    return total
-
-
-def _sub_jaxprs(v):
-    """Duck-typed extraction of nested jaxprs from an eqn param value."""
-    if hasattr(v, "eqns"):
-        return [v]
-    if hasattr(v, "jaxpr"):
-        return [v.jaxpr]
-    if isinstance(v, (list, tuple)):
-        out = []
-        for item in v:
-            out.extend(_sub_jaxprs(item))
-        return out
-    return []
 
 
 def fused_bucket_streams(bucket_bytes: int, code_bytes: int) -> dict:
@@ -146,9 +72,10 @@ _SCRIPT = textwrap.dedent("""
     from repro.train.trainer import DecentralizedTrainer
     from repro.optim import make_optimizer, cosine_schedule
     from repro.launch.mesh import make_mesh
-    from benchmarks.bench_fused import (count_pallas_calls,
-                                        fused_bucket_streams,
-                                        stream_audit_hlo)
+    from benchmarks.bench_fused import fused_bucket_streams
+    from repro.analysis.hlo_audit import entry_stream_audit
+    from repro.analysis.invariants import CONTEXT_VARS, assert_invariant
+    from repro.analysis.jaxpr_audit import count_pallas_calls
 
     cfg = get_config("qwen3-1.7b", smoke=True)
     model = build_model(cfg)
@@ -173,7 +100,7 @@ _SCRIPT = textwrap.dedent("""
         rec = {}
         if bk == "jnp":
             hlo = jax.jit(ex).lower(*args).compile().as_text()
-            rec.update(stream_audit_hlo(hlo))
+            rec.update(entry_stream_audit(hlo))
         else:
             jaxpr = jax.make_jaxpr(ex)(*args)
             rec["pallas_calls"] = count_pallas_calls(jaxpr.jaxpr)
@@ -195,7 +122,10 @@ _SCRIPT = textwrap.dedent("""
             rec["bytes"] = sum(p["bytes"] for p in per_bucket)
             rec["streams"] = sum(p["full_streams"] for p in per_bucket)
             rec["per_bucket"] = per_bucket
-            assert rec["pallas_calls"] == 2 * spec.n_buckets, rec
+            assert_invariant("choco_serial", "pallas",
+                             {"pallas_calls": rec["pallas_calls"]},
+                             dict(CONTEXT_VARS, buckets=spec.n_buckets,
+                                  steps=1))
         exchanges[bk] = jax.jit(ex)
         states[bk] = args
         out[bk] = rec
@@ -248,6 +178,7 @@ def fused_audit():
 
 
 def run():
+    """Benchmark entry point (python -m benchmarks.run)."""
     fused_audit()
 
 

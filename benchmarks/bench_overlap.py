@@ -5,37 +5,26 @@ simulated devices — that the pipelined engine (comm/pipelined.py) removes
 the data dependency that serializes compressed communication behind the
 backward pass.
 
-The CPU backend lowers ``lax.ppermute`` to a synchronous
-``collective-permute`` (no start/done pair to place), and printed
-instruction order is not a schedule, so "how far apart are start and done"
-cannot be read off the text directly.  What CAN be read off — and is the
-scheduler-independent fact that start/done separation on an async backend
-follows from — is the DEPENDENCY structure: an async scheduler may move
-collective-start before, and collective-done after, exactly those ops that
-are not on a path to/from the collective.  So the audit computes the
-transitive operand closure of every collective-permute in the entry
-computation and counts the matmuls inside it (descending into fused/called
-computations, e.g. the transformer's scan-over-layers while loop):
+The dependency analysis itself lives in
+``repro.analysis.hlo_audit.collective_dependency_audit`` (shared with
+``tests/test_pipelined.py`` and the invariant lint); the expected numbers
+live in the engine-invariant registry
+(``repro.analysis.invariants.ENGINE_INVARIANTS``):
 
-  * serial engine:    the payload is Q(x_half - x_hat) and x_half is
-    downstream of the gradient, so every forward/backward dot feeds the
-    collective — the wire transfer cannot begin until the backward pass
-    has finished.
-  * pipelined engine: the payload is Q(x_k - x_hat_k) from the carry, so
-    ZERO dots feed the collective — it is launchable at step start,
-    concurrent with the entire forward/backward (start and its done are
-    separable by all of the step's matmul compute).
+  * serial engine:    every forward/backward dot feeds the collective —
+    the wire transfer cannot begin until the backward pass has finished.
+  * pipelined engine: ZERO dots feed the collective — it is launchable at
+    step start, concurrent with the entire forward/backward, and adds no
+    permute launches over serial.
 
 Sections:
   * overlap_audit — dots_feeding_collective for serial vs pipelined on the
-    qwen3-1.7b smoke config, plus permute-launch parity (pipelining adds
-    zero collectives) and walltime/step.  Emits machine-readable
-    BENCH_overlap.json at the repo root so the perf trajectory is tracked
-    from PR 6 onward.
+    qwen3-1.7b smoke config, checked against the registry, plus
+    walltime/step.  Emits machine-readable BENCH_overlap.json at the repo
+    root so the perf trajectory is tracked from PR 6 onward.
 """
 import json
 import os
-import re
 import subprocess
 import sys
 import textwrap
@@ -60,7 +49,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.optim import make_optimizer, cosine_schedule
     from repro.data.synthetic import make_lm_batch_fn
     from repro.launch.mesh import make_mesh
-    from benchmarks.bench_overlap import audit_hlo_text
+    from repro.analysis.hlo_audit import collective_dependency_audit
 
     cfg = get_config("qwen3-1.7b", smoke=True)
     model = build_model(cfg)
@@ -81,7 +70,7 @@ _SCRIPT = textwrap.dedent("""
         step = tr.jitted_train_step(jax.eval_shape(lambda: state),
                                     jax.eval_shape(lambda: batch))
         hlo = step.lower(state, batch).compile().as_text()
-        rec = audit_hlo_text(hlo)
+        rec = collective_dependency_audit(hlo).as_dict()
         state, _ = step(state, batch)          # compile + donate once
         t0 = time.time()
         iters = 5
@@ -94,89 +83,11 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
-def _hlo_computations(hlo: str):
-    """Split HLO text into {computation_name: [instruction lines]}."""
-    comps, cur, body = {}, None, []
-    for line in hlo.splitlines():
-        if re.match(r"^\S.*\{\s*$", line):
-            cur = line.split()[0].lstrip("%")
-            if cur.startswith("ENTRY"):
-                cur = line.split()[1].lstrip("%")
-            body = comps.setdefault(cur, [])
-            if line.startswith("ENTRY"):
-                comps["__entry__"] = body
-        elif cur is not None and line.strip() and line.strip() != "}":
-            body.append(line)
-    return comps
-
-
-_CALLED = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
-_NAMES = re.compile(r"%([\w\.\-]+)")
-
-
-def _dots_in(comps, name, memo):
-    """Transitive dot(...) count of a computation, descending into the
-    computations it calls (fusions, while bodies, to_apply reducers)."""
-    if name in memo:
-        return memo[name]
-    memo[name] = 0          # cycle guard (HLO call graphs are acyclic)
-    total = 0
-    for line in comps.get(name, ()):
-        if "dot(" in line:
-            total += 1
-        for callee in _CALLED.findall(line):
-            total += _dots_in(comps, callee, memo)
-    memo[name] = total
-    return total
-
-
-def audit_hlo_text(hlo: str) -> dict:
-    """Dependency audit of a compiled train-step HLO module.
-
-    Returns dot counts for the whole module and for the transitive operand
-    closure of its collective-permutes: ``dots_feeding_collective`` is the
-    matmul work an async scheduler must finish BEFORE the wire transfer can
-    start — 0 means the collective is launchable at step start and its
-    start/done pair is separable by the entire forward/backward compute.
-    """
-    comps = _hlo_computations(hlo)
-    entry = comps.get("__entry__", [])
-    defs, deps, called = {}, {}, {}
-    for line in entry:
-        m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=", line)
-        if not m:
-            continue
-        name = m.group(1)
-        defs[name] = line
-        callees = set(_CALLED.findall(line))
-        rhs = line.split("=", 1)[1]
-        deps[name] = [n for n in _NAMES.findall(rhs)
-                      if n != name and n not in callees]
-        called[name] = callees
-    permutes = [n for n, l in defs.items() if "collective-permute" in l]
-    memo = {}
-    seen, stack = set(), []
-    for p in permutes:
-        stack.extend(deps.get(p, []))
-    feeding_dots = 0
-    while stack:
-        n = stack.pop()
-        if n in seen or n not in defs:
-            continue
-        seen.add(n)
-        if "dot(" in defs[n]:
-            feeding_dots += 1
-        for c in called.get(n, ()):
-            feeding_dots += _dots_in(comps, c, memo)
-        stack.extend(deps.get(n, []))
-    total = _dots_in(comps, "__entry__", {})
-    return {"permute_launches": len(permutes),
-            "dots_total": total,
-            "dots_feeding_collective": feeding_dots}
-
-
 def overlap_audit():
-    """Run the subprocess audit and emit CSV rows + BENCH_overlap.json."""
+    """Run the subprocess audit, check the registry invariants, emit CSV
+    rows + BENCH_overlap.json."""
+    from repro.analysis.invariants import CONTEXT_VARS, assert_invariant
+
     env = dict(os.environ, PYTHONPATH=SRC + os.pathsep
                + os.path.join(SRC, ".."))
     env.pop("XLA_FLAGS", None)
@@ -193,6 +104,18 @@ def overlap_audit():
              f"permute_launches={rec['permute_launches']};"
              f"dots_total={rec['dots_total']};"
              f"dots_feeding_collective={rec['dots_feeding_collective']}")
+    # the registry is the single statement of what these numbers must be
+    ctx = dict(CONTEXT_VARS, dots_total=out["serial"]["dots_total"],
+               baseline=out["serial"]["permute_launches"])
+    assert_invariant("choco_serial", "jnp",
+                     {"dots_feeding_collective":
+                      out["serial"]["dots_feeding_collective"]}, ctx)
+    ctx["dots_total"] = out["pipelined"]["dots_total"]
+    assert_invariant("choco_pipelined", "jnp",
+                     {"dots_feeding_collective":
+                      out["pipelined"]["dots_feeding_collective"],
+                      "permute_launches":
+                      out["pipelined"]["permute_launches"]}, ctx)
     out["config"] = {"arch": "qwen3-1.7b-smoke", "devices": 8,
                      "compressor": "top_k", "fraction": 0.05,
                      "topology": "ring"}
@@ -203,6 +126,7 @@ def overlap_audit():
 
 
 def run():
+    """Benchmark entry point (python -m benchmarks.run)."""
     overlap_audit()
 
 

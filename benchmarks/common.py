@@ -1,14 +1,13 @@
 """Shared benchmark utilities: timing + CSV emission + roofline constants."""
-import os
 import time
 
 import jax
 
 #: HBM bandwidth (bytes/s) every roofline-derived column is computed
-#: against — one constant for all benchmarks so bench_kernels and
-#: bench_fused report comparable numbers.  Default is the v5e figure the
-#: kernels target; override with REPRO_HBM_BW for other parts.
-HBM_BW = float(os.environ.get("REPRO_HBM_BW", 819e9))
+#: against.  Single source of truth is repro.analysis.roofline (v5e figure,
+#: REPRO_HBM_BW overrides) — re-exported here so benchmarks keep their
+#: one-import habit.
+from repro.analysis.roofline import HBM_BW  # noqa: E402
 
 
 def time_fn(fn, *args, iters=3, warmup=1, **kw):

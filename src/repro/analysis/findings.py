@@ -1,0 +1,41 @@
+"""Shared finding type for the static-analysis passes (`repro.analysis`).
+
+Every lint pass (``source_lint``, ``fingerprint_lint``, the invariant
+checks in ``invariants``) reports violations as :class:`Finding` records
+so the ``python -m repro.analysis.lint`` driver can render them uniformly
+(``path:line: [pass] message``) and exit non-zero iff any pass found one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation, anchored to a file/line where possible."""
+
+    #: which pass produced it ("source", "fingerprint", "invariants")
+    pass_name: str
+    #: repo-relative path of the offending file ("" for repo-level findings)
+    path: str
+    #: 1-based line number (0 when the finding is not line-anchored)
+    line: int
+    #: human-pointed description of the violated contract
+    message: str
+
+    def render(self) -> str:
+        """``path:line: [pass] message`` (line omitted when 0)."""
+        loc = f"{self.path}:{self.line}" if self.line else (self.path or "<repo>")
+        return f"{loc}: [{self.pass_name}] {self.message}"
+
+
+def render_findings(findings: Iterable[Finding]) -> str:
+    """Render findings one per line, stable order (path, line, message)."""
+    ordered = sorted(findings, key=lambda f: (f.path, f.line, f.message))
+    return "\n".join(f.render() for f in ordered)
+
+
+def sort_findings(findings: Iterable[Finding]) -> List[Finding]:
+    """Stable (path, line, message) ordering used by the CLI driver."""
+    return sorted(findings, key=lambda f: (f.path, f.line, f.message))

@@ -1,0 +1,159 @@
+"""Fingerprint-coverage lint: every ChocoConfig field is accounted for.
+
+The checkpoint manifest fingerprint (``DecentralizedTrainer.fingerprint``)
+is the contract that decides whether a restore is resume-exact, elastic,
+or refused.  A ChocoConfig field that silently falls outside it is a
+correctness hazard: a resumed run could change, say, a compression knob
+and keep error-feedback state built under a different omega.  This pass
+closes that hole *statically*:
+
+    every field of ``ChocoConfig`` must either be read by
+    ``fingerprint()`` (directly, or by a helper method it calls), or be
+    named in the trainer's ``FINGERPRINT_EXEMPT`` allowlist with a
+    non-empty reason string.
+
+Everything is AST — the pass never imports the trainer (no jax), so it
+runs in the fast tier and works on scratch fixture trees via ``root``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+CONFIG_REL = "src/repro/configs/base.py"
+TRAINER_REL = "src/repro/train/trainer.py"
+CONFIG_CLASS = "ChocoConfig"
+TRAINER_CLASS = "DecentralizedTrainer"
+FINGERPRINT_METHOD = "fingerprint"
+EXEMPT_NAME = "FINGERPRINT_EXEMPT"
+
+
+def _parse(root: str, rel: str):
+    path = os.path.join(root, *rel.split("/"))
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return ast.parse(f.read(), filename=path)
+
+
+def _find_class(tree: ast.Module, name: str):
+    return next((n for n in tree.body
+                 if isinstance(n, ast.ClassDef) and n.name == name), None)
+
+
+def choco_config_fields(root: str,
+                        config_rel: str = CONFIG_REL) -> Dict[str, int]:
+    """``{field_name: lineno}`` for every annotated ChocoConfig field."""
+    tree = _parse(root, config_rel)
+    cls = _find_class(tree, CONFIG_CLASS) if tree else None
+    if cls is None:
+        return {}
+    return {n.target.id: n.lineno for n in cls.body
+            if isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name)}
+
+
+def _choco_attrs(fn: ast.FunctionDef) -> Set[str]:
+    """Names X accessed as ``self.choco.X`` anywhere in a method body."""
+    out = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Attribute)
+                and node.value.attr == "choco"
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id == "self"):
+            out.add(node.attr)
+    return out
+
+
+def fingerprinted_fields(root: str,
+                         trainer_rel: str = TRAINER_REL) -> Set[str]:
+    """ChocoConfig attrs read by ``fingerprint()`` — including, one call
+    hop deep, the ``self.<helper>()`` methods it delegates to (e.g.
+    ``_effective_staleness`` reads ``max_staleness``)."""
+    tree = _parse(root, trainer_rel)
+    cls = _find_class(tree, TRAINER_CLASS) if tree else None
+    if cls is None:
+        return set()
+    methods = {n.name: n for n in cls.body if isinstance(n, ast.FunctionDef)}
+    fp = methods.get(FINGERPRINT_METHOD)
+    if fp is None:
+        return set()
+    fields = _choco_attrs(fp)
+    for node in ast.walk(fp):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"
+                and node.func.attr in methods):
+            fields |= _choco_attrs(methods[node.func.attr])
+    return fields
+
+
+def exempt_fields(root: str, trainer_rel: str = TRAINER_REL
+                  ) -> Tuple[Dict[str, str], List[Finding]]:
+    """Parse the module-level ``FINGERPRINT_EXEMPT`` dict literal.
+
+    Returns ``({field: reason}, findings)`` — malformed entries (non-string
+    keys, empty reasons) become findings rather than exemptions.
+    """
+    tree = _parse(root, trainer_rel)
+    if tree is None:
+        return {}, []
+    node = next((n.value for n in tree.body if isinstance(n, ast.Assign)
+                 for t in n.targets
+                 if isinstance(t, ast.Name) and t.id == EXEMPT_NAME), None)
+    if not isinstance(node, ast.Dict):
+        return {}, []
+    exempt, findings = {}, []
+    for k, v in zip(node.keys, node.values):
+        key = k.value if isinstance(k, ast.Constant) else None
+        reason = v.value if isinstance(v, ast.Constant) else None
+        if not isinstance(key, str) or not isinstance(reason, str) \
+                or not reason.strip():
+            findings.append(Finding(
+                "fingerprint", trainer_rel, getattr(k, "lineno", 0),
+                f"{EXEMPT_NAME} entries must map a field-name string to a "
+                f"non-empty reason string"))
+            continue
+        exempt[key] = reason
+    return exempt, findings
+
+
+def run_fingerprint_lint(root: str, config_rel: str = CONFIG_REL,
+                         trainer_rel: str = TRAINER_REL) -> List[Finding]:
+    """The full coverage check: every ChocoConfig field fingerprinted XOR
+    exempt-with-reason; exemptions must name real, un-fingerprinted
+    fields."""
+    fields = choco_config_fields(root, config_rel)
+    if not fields:
+        return [Finding("fingerprint", config_rel, 0,
+                        f"could not locate {CONFIG_CLASS} fields — the "
+                        f"fingerprint-coverage contract has nothing to "
+                        f"check against")]
+    fingerprinted = fingerprinted_fields(root, trainer_rel)
+    exempt, findings = exempt_fields(root, trainer_rel)
+    for name, lineno in sorted(fields.items()):
+        in_fp, in_ex = name in fingerprinted, name in exempt
+        if in_fp and in_ex:
+            findings.append(Finding(
+                "fingerprint", trainer_rel, 0,
+                f"ChocoConfig.{name} is both fingerprinted and listed in "
+                f"{EXEMPT_NAME} — drop the stale exemption"))
+        elif not in_fp and not in_ex:
+            findings.append(Finding(
+                "fingerprint", config_rel, lineno,
+                f"ChocoConfig.{name} is not covered by "
+                f"{TRAINER_CLASS}.{FINGERPRINT_METHOD}() and has no "
+                f"{EXEMPT_NAME} entry: a resumed run could change it "
+                f"without the restore path noticing — fingerprint it, or "
+                f"exempt it with a reason"))
+    for name in sorted(exempt):
+        if name not in fields:
+            findings.append(Finding(
+                "fingerprint", trainer_rel, 0,
+                f"{EXEMPT_NAME} names {name!r}, which is not a "
+                f"ChocoConfig field — stale exemption"))
+    return findings

@@ -1,0 +1,233 @@
+"""Typed HLO-text auditing: the IR half of the repro.analysis subsystem.
+
+Every load-bearing structural claim the repo makes about compiled train
+steps is parsed out of ``compiled.as_text()`` by the functions here —
+one shared, unit-tested implementation instead of the per-benchmark
+copies that used to live in ``benchmarks/bench_{overlap,fused,async}.py``:
+
+* :func:`count_permute_launches` — collective-permute launch counting
+  (start/done pairs counted once), whole-module or entry-computation-only
+  (the matching engine's "all permutes live inside switch branches" audit).
+* :func:`collective_dependency_audit` — the scheduler-independent operand
+  closure of the collective-permutes: how many matmuls MUST retire before
+  the wire transfer can start (0 == the collective is launchable at step
+  start and overlappable with the whole forward/backward — the pipelined
+  engine's claim, EXPERIMENTS.md §Perf H).
+* :func:`entry_stream_audit` — full-size HBM stream counting over the
+  entry computation (post-fusion reads/writes at or above a size
+  threshold — the fused-kernel traffic claim, EXPERIMENTS.md §Perf I).
+* :func:`hlo_computations` — the underlying module -> computation split.
+
+These parsers never compile anything; they are pure text analysis, so
+parser regressions are caught by hand-written HLO fixtures in
+``tests/test_hlo_audit.py`` without touching a device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+#: f32 tensors at or above this many elements count as full-size streams
+#: in :func:`entry_stream_audit` (gossip state buckets are hundreds of KB;
+#: scalars and per-bucket scales are not).
+STREAM_THRESHOLD = 1 << 14
+
+#: bytes per element for the dtypes :func:`entry_stream_audit` can count
+STREAM_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+}
+
+_CALLED = re.compile(r"(?:calls|to_apply|body|condition)=%([\w\.\-]+)")
+_NAMES = re.compile(r"%([\w\.\-]+)")
+
+
+def hlo_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split HLO text into ``{computation_name: [instruction lines]}``.
+
+    The entry computation is additionally keyed ``"__entry__"`` (same list
+    object), so callers need not know its mangled name.
+    """
+    comps, cur, body = {}, None, []
+    for line in hlo.splitlines():
+        if re.match(r"^\S.*\{\s*$", line):
+            cur = line.split()[0].lstrip("%")
+            if cur.startswith("ENTRY"):
+                cur = line.split()[1].lstrip("%")
+            body = comps.setdefault(cur, [])
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = body
+        elif cur is not None and line.strip() and line.strip() != "}":
+            body.append(line)
+    return comps
+
+
+def _is_permute_launch(line: str) -> bool:
+    """One launch per collective-permute; async start/done pairs count once
+    (the ``-done`` half is the completion of an already-counted start)."""
+    return "collective-permute" in line and "-done" not in line
+
+
+def count_permute_launches(hlo: str, *, entry_only: bool = False) -> int:
+    """Count collective-permute launches in an HLO module.
+
+    ``entry_only=True`` restricts to the entry computation — the matching
+    engine's audit, where every permute must live inside a ``lax.switch``
+    branch computation and the entry carries zero unconditional launches.
+    """
+    if entry_only:
+        lines = hlo_computations(hlo).get("__entry__", [])
+    else:
+        lines = hlo.splitlines()
+    return sum(1 for l in lines if _is_permute_launch(l))
+
+
+def count_dots(comps: Dict[str, List[str]], name: str,
+               memo: Optional[dict] = None) -> int:
+    """Transitive ``dot(...)`` count of a computation, descending into the
+    computations it calls (fusions, while bodies, ``to_apply`` reducers)."""
+    memo = {} if memo is None else memo
+    if name in memo:
+        return memo[name]
+    memo[name] = 0          # cycle guard (HLO call graphs are acyclic)
+    total = 0
+    for line in comps.get(name, ()):
+        if "dot(" in line:
+            total += 1
+        for callee in _CALLED.findall(line):
+            total += count_dots(comps, callee, memo)
+    memo[name] = total
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveDependencyAudit:
+    """Dependency audit of one compiled train-step module.
+
+    ``dots_feeding_collective`` is the matmul work an async scheduler must
+    finish BEFORE the wire transfer can start — 0 means the collective is
+    launchable at step start and its start/done pair is separable by the
+    entire forward/backward compute.
+    """
+
+    permute_launches: int
+    dots_total: int
+    dots_feeding_collective: int
+
+    def as_dict(self) -> dict:
+        """The BENCH_overlap.json record shape (stable key names)."""
+        return {"permute_launches": self.permute_launches,
+                "dots_total": self.dots_total,
+                "dots_feeding_collective": self.dots_feeding_collective}
+
+
+def collective_dependency_audit(hlo: str) -> CollectiveDependencyAudit:
+    """Transitive operand closure of every collective-permute in the entry
+    computation, counting the matmuls inside it (descending into
+    fused/called computations, e.g. a scan-over-layers while loop).
+
+    The CPU backend lowers ``lax.ppermute`` synchronously and printed HLO
+    instruction order is not a schedule, so start/done separation cannot be
+    read off the text; the DEPENDENCY structure can — an async scheduler
+    may move collective-start before, and collective-done after, exactly
+    those ops not on a path to/from the collective.
+    """
+    comps = hlo_computations(hlo)
+    entry = comps.get("__entry__", [])
+    defs, deps, called = {}, {}, {}
+    for line in entry:
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=", line)
+        if not m:
+            continue
+        name = m.group(1)
+        defs[name] = line
+        callees = set(_CALLED.findall(line))
+        rhs = line.split("=", 1)[1]
+        deps[name] = [n for n in _NAMES.findall(rhs)
+                      if n != name and n not in callees]
+        called[name] = callees
+    permutes = [n for n, l in defs.items() if "collective-permute" in l]
+    memo = {}
+    seen, stack = set(), []
+    for p in permutes:
+        stack.extend(deps.get(p, []))
+    feeding_dots = 0
+    while stack:
+        n = stack.pop()
+        if n in seen or n not in defs:
+            continue
+        seen.add(n)
+        if "dot(" in defs[n]:
+            feeding_dots += 1
+        for c in called.get(n, ()):
+            feeding_dots += count_dots(comps, c, memo)
+        stack.extend(deps.get(n, []))
+    total = count_dots(comps, "__entry__", {})
+    return CollectiveDependencyAudit(
+        permute_launches=len(permutes), dots_total=total,
+        dots_feeding_collective=feeding_dots)
+
+
+def _elems(dims: str) -> int:
+    total = 1
+    for d in dims.split(","):
+        if d:
+            total *= int(d)
+    return total
+
+
+def entry_stream_audit(hlo: str, threshold: int = STREAM_THRESHOLD,
+                       dtypes: Tuple[str, ...] = ("f32",)) -> dict:
+    """Count full-size streams in the ENTRY computation of an HLO module.
+
+    Defs are writes, operands are reads — both post-fusion, i.e. actual
+    HBM traffic under XLA's fusion model.  Parameter declarations and
+    tuple plumbing define no stream; their tensors are counted where an
+    instruction actually consumes them.  Only tensors of the requested
+    ``dtypes`` at or above ``threshold`` elements count (the first shaped
+    match on a line is its def, the rest its operands), so e.g. int16
+    wire-code or bf16 state lines are invisible to the default f32 audit
+    and become visible by passing ``dtypes=("f32", "bf16", "s16")``.
+
+    Returns ``{"streams", "reads", "writes", "bytes"}`` — the
+    BENCH_fused.json record shape.
+    """
+    unknown = [d for d in dtypes if d not in STREAM_DTYPE_BYTES]
+    if unknown:
+        raise ValueError(f"unknown stream dtypes {unknown}; "
+                         f"known: {sorted(STREAM_DTYPE_BYTES)}")
+    shape_re = re.compile(r"\b(" + "|".join(map(re.escape, dtypes))
+                          + r")\[([\d,]*)\]")
+    entry, depth, in_entry = [], 0, False
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            depth = 0
+        if in_entry:
+            depth += line.count("{") - line.count("}")
+            entry.append(line)
+            if depth <= 0 and "}" in line:
+                break
+    reads = writes = read_bytes = write_bytes = 0
+    for line in entry[1:]:
+        s = line.strip()
+        if not s or s == "}" or "parameter(" in s \
+                or s.startswith(("ROOT %tuple", "ROOT tuple")) \
+                or "get-tuple-element" in s:
+            continue
+        shapes = shape_re.findall(s)
+        if not shapes or "=" not in s:
+            continue
+        dt, dims = shapes[0]
+        d = _elems(dims)
+        if d >= threshold:
+            writes += 1
+            write_bytes += d * STREAM_DTYPE_BYTES[dt]
+        for dt, dims in shapes[1:]:
+            d = _elems(dims)
+            if d >= threshold:
+                reads += 1
+                read_bytes += d * STREAM_DTYPE_BYTES[dt]
+    return {"streams": reads + writes, "reads": reads, "writes": writes,
+            "bytes": read_bytes + write_bytes}

@@ -1,0 +1,245 @@
+"""Declarative engine-invariant registry for the gossip engines.
+
+CHOCO-SGD's value proposition is *provable* communication structure
+(Koloskova et al. 2019): the pipelined engine's wire must be gated by
+zero matmuls, the fused backend must launch exactly two kernels per
+bucket per round, the async engine must add zero permute launches over
+its link-failure baseline, the matching engine must keep every permute
+inside a switch branch.  Each of those used to live as a literal inside
+one benchmark or test; here they are *data* — an
+:class:`EngineInvariant` per (engine, backend) — checked uniformly by
+:func:`check_invariant`, consumed by ``benchmarks/bench_{overlap,fused,
+async}.py``, asserted over live compiles by ``tests/test_invariants.py``,
+and re-validated against the committed BENCH_*.json records by
+``python -m repro.analysis.lint`` (:func:`lint_bench_invariants`).
+
+Expectations are tiny arithmetic expressions over a measurement context
+(``"2 * buckets * steps"``, ``"dots_total"``, ``"0"``) so a new engine
+adds one registry line, not a new parser: see
+``docs/ARCHITECTURE.md §Static analysis & invariants``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+#: names an expectation expression may reference, with the dummy values
+#: the registry self-check evaluates them under
+CONTEXT_VARS = {
+    "buckets": 2,        # bucket count of the packed spec
+    "steps": 1,          # gossip rounds per SGD step
+    "rounds": 2,         # compiled schedule rounds
+    "dots_total": 30,    # total matmuls in the compiled step
+    "baseline": 16,      # reference engine's measurement (parity checks)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineInvariant:
+    """One engine x backend contract: metric -> expected-value expression.
+
+    ``expect`` maps a measured metric name (``permute_launches``,
+    ``dots_feeding_collective``, ``pallas_calls``,
+    ``entry_permute_launches``) to an arithmetic expression over
+    :data:`CONTEXT_VARS`.  ``backend="*"`` applies to every kernel
+    backend.
+    """
+
+    engine: str
+    backend: str
+    description: str
+    expect: Tuple[Tuple[str, str], ...]
+
+
+#: The registry: every structural claim a benchmark or test asserts about
+#: a gossip engine's compiled/traced form lives here, nowhere else.
+ENGINE_INVARIANTS: Tuple[EngineInvariant, ...] = (
+    EngineInvariant(
+        engine="choco_serial", backend="jnp",
+        description="serial engine: the payload is Q(x_half - x_hat) and "
+                    "x_half is downstream of the gradient, so EVERY "
+                    "forward/backward matmul gates the wire; no fused "
+                    "kernels are traced",
+        expect=(("dots_feeding_collective", "dots_total"),
+                ("pallas_calls", "0"))),
+    EngineInvariant(
+        engine="choco_serial", backend="pallas",
+        description="fused backend: exactly two kernel launches per bucket "
+                    "per gossip round — one quantize+pack, one "
+                    "dequant+EF-update; more would mean unfused glue "
+                    "re-reading the buckets",
+        expect=(("pallas_calls", "2 * buckets * steps"),)),
+    EngineInvariant(
+        engine="choco_pipelined", backend="*",
+        description="pipelined engine: the payload Q(x_k - x_hat_k) reads "
+                    "only the carry, so ZERO matmuls gate the wire (the "
+                    "collective is launchable at step start) and "
+                    "pipelining adds zero permute launches over serial",
+        expect=(("dots_feeding_collective", "0"),
+                ("permute_launches", "baseline"))),
+    EngineInvariant(
+        engine="choco_staleness", backend="jnp",
+        description="bounded-staleness engine: arrived-vs-stale selection "
+                    "is where-mask arithmetic over ring slots — zero "
+                    "permute launches added over the linkfail baseline",
+        expect=(("permute_launches", "baseline"),)),
+    EngineInvariant(
+        engine="choco_matching", backend="jnp",
+        description="matching engine: one sampled round per step via "
+                    "lax.switch — the entry computation carries zero "
+                    "unconditional permute launches",
+        expect=(("entry_permute_launches", "0"),)),
+)
+
+
+def get_invariant(engine: str, backend: str = "jnp") -> EngineInvariant:
+    """Look up the invariant for (engine, backend); a ``backend="*"``
+    entry matches any backend.  Raises ``KeyError`` for unknown engines."""
+    fallback = None
+    for inv in ENGINE_INVARIANTS:
+        if inv.engine != engine:
+            continue
+        if inv.backend == backend:
+            return inv
+        if inv.backend == "*":
+            fallback = inv
+    if fallback is not None:
+        return fallback
+    raise KeyError(f"no EngineInvariant registered for engine={engine!r} "
+                   f"backend={backend!r}")
+
+
+def evaluate_expectation(expr: str, ctx: Optional[Dict[str, int]] = None) -> int:
+    """Evaluate an expectation expression over a measurement context.
+
+    The expression language is deliberately tiny: integer literals,
+    :data:`CONTEXT_VARS` names, and ``+ - * // ( )``.  Unknown names or
+    other syntax raise ``ValueError`` (caught by the registry self-check).
+    """
+    ctx = dict(CONTEXT_VARS if ctx is None else ctx)
+    allowed = set("0123456789+-*/() _")
+    stripped = expr
+    for name in sorted(ctx, key=len, reverse=True):
+        stripped = stripped.replace(name, "")
+    if not set(stripped) <= allowed:
+        raise ValueError(f"expectation {expr!r} uses names outside the "
+                         f"context {sorted(ctx)}")
+    try:
+        return int(eval(expr, {"__builtins__": {}}, ctx))  # noqa: S307
+    except Exception as e:
+        raise ValueError(f"expectation {expr!r} failed to evaluate over "
+                         f"{sorted(ctx)}: {e}") from e
+
+
+def check_invariant(inv: EngineInvariant, measured: Dict[str, int],
+                    ctx: Optional[Dict[str, int]] = None) -> List[str]:
+    """Check measurements against one invariant.
+
+    ``measured`` maps metric names to observed values; ``ctx`` supplies
+    the expression variables (``buckets``, ``steps``, ``dots_total``,
+    ``baseline``, ...).  Metrics the caller did not measure are skipped —
+    a benchmark checks only what it observed.  Returns a list of pointed
+    violation strings; empty means the contract holds.
+    """
+    violations = []
+    for metric, expr in inv.expect:
+        if metric not in measured:
+            continue
+        expected = evaluate_expectation(expr, ctx)
+        actual = measured[metric]
+        if actual != expected:
+            violations.append(
+                f"{inv.engine}/{inv.backend}: {metric} = {actual}, "
+                f"expected {expr} = {expected} ({inv.description})")
+    return violations
+
+
+def assert_invariant(engine: str, backend: str, measured: Dict[str, int],
+                     ctx: Optional[Dict[str, int]] = None) -> None:
+    """Registry lookup + check + raise: the one-liner the benchmarks call
+    instead of private literal asserts."""
+    violations = check_invariant(get_invariant(engine, backend), measured, ctx)
+    if violations:
+        raise AssertionError("; ".join(violations))
+
+
+# ---------------------------------------------------------------------------
+# lint pass: registry self-check + committed BENCH_*.json conformance
+# ---------------------------------------------------------------------------
+
+def _registry_findings() -> List[Finding]:
+    findings = []
+    seen = set()
+    for inv in ENGINE_INVARIANTS:
+        key = (inv.engine, inv.backend)
+        if key in seen:
+            findings.append(Finding(
+                "invariants", "src/repro/analysis/invariants.py", 0,
+                f"duplicate registry entry for {key}"))
+        seen.add(key)
+        for metric, expr in inv.expect:
+            try:
+                evaluate_expectation(expr)
+            except ValueError as e:
+                findings.append(Finding(
+                    "invariants", "src/repro/analysis/invariants.py", 0,
+                    f"{inv.engine}/{inv.backend}: bad expectation "
+                    f"for {metric}: {e}"))
+    return findings
+
+
+def _bench_overlap_findings(root: str) -> List[Finding]:
+    path = os.path.join(root, "BENCH_overlap.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rec = json.load(f)
+    findings = []
+    serial, pipe = rec.get("serial", {}), rec.get("pipelined", {})
+    ctx = dict(CONTEXT_VARS)
+    ctx["dots_total"] = serial.get("dots_total", 0)
+    for v in check_invariant(get_invariant("choco_serial", "jnp"),
+                             {"dots_feeding_collective":
+                              serial.get("dots_feeding_collective", -1)}, ctx):
+        findings.append(Finding("invariants", "BENCH_overlap.json", 0, v))
+    ctx["baseline"] = serial.get("permute_launches", 0)
+    ctx["dots_total"] = pipe.get("dots_total", 0)
+    measured = {"dots_feeding_collective":
+                pipe.get("dots_feeding_collective", -1),
+                "permute_launches": pipe.get("permute_launches", -1)}
+    for v in check_invariant(get_invariant("choco_pipelined", "jnp"),
+                             measured, ctx):
+        findings.append(Finding("invariants", "BENCH_overlap.json", 0, v))
+    return findings
+
+
+def _bench_fused_findings(root: str) -> List[Finding]:
+    path = os.path.join(root, "BENCH_fused.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rec = json.load(f)
+    findings = []
+    pallas = rec.get("pallas", {})
+    ctx = dict(CONTEXT_VARS)
+    ctx["buckets"] = pallas.get("n_buckets", 0)
+    ctx["steps"] = 1          # the fused audit traces one gossip round
+    for v in check_invariant(get_invariant("choco_serial", "pallas"),
+                             {"pallas_calls": pallas.get("pallas_calls", -1)},
+                             ctx):
+        findings.append(Finding("invariants", "BENCH_fused.json", 0, v))
+    return findings
+
+
+def lint_bench_invariants(root: str) -> List[Finding]:
+    """The invariant lint pass: the registry is well-formed and the
+    committed benchmark records (BENCH_overlap.json / BENCH_fused.json)
+    still satisfy the contracts they were measured under.  A doctored or
+    regressed record — e.g. a wrong permute-launch count, a non-zero
+    gated-matmul count for the pipelined engine — is a finding."""
+    return (_registry_findings() + _bench_overlap_findings(root)
+            + _bench_fused_findings(root))

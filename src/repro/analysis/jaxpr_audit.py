@@ -1,0 +1,56 @@
+"""Typed jaxpr auditing: structural launch counting without compiling.
+
+The fused-kernel contract (kernels/dispatch.py, EXPERIMENTS.md §Perf I)
+is asserted on the *jaxpr*, not the HLO: interpret-mode Pallas lowers to
+grid loops on CPU, so compiled text is unrepresentative of the TPU
+lowering, while the number of ``pallas_call`` equations in the traced
+program is backend-independent.  This module is the shared implementation
+behind ``benchmarks/bench_fused.py`` and ``tests/test_fused.py``.
+
+Everything here is duck-typed over jaxpr objects (``.eqns`` /
+``.jaxpr`` attributes) so it works across jax versions and never imports
+jax itself.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def sub_jaxprs(v) -> List:
+    """Duck-typed extraction of nested jaxprs from an eqn param value.
+
+    Accepts a (closed) jaxpr, a ClosedJaxpr-like wrapper carrying
+    ``.jaxpr``, or an arbitrarily nested list/tuple of either; returns the
+    flat list of inner jaxprs (possibly empty).
+    """
+    if hasattr(v, "eqns"):
+        return [v]
+    if hasattr(v, "jaxpr"):
+        return [v.jaxpr]
+    if isinstance(v, (list, tuple)):
+        out = []
+        for item in v:
+            out.extend(sub_jaxprs(item))
+        return out
+    return []
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    """Recursively count equations of primitive ``name`` in a jaxpr,
+    descending into every nested jaxpr (pjit/closed_call bodies, scan and
+    while carries, cond branches, custom_vjp calls, ...)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        for v in eqn.params.values():
+            for sub in sub_jaxprs(v):
+                total += count_primitive(sub, name)
+    return total
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count ``pallas_call`` equations in a (closed) jaxpr —
+    the fused-launch count the 2-launches-per-bucket contract is stated
+    over."""
+    return count_primitive(jaxpr, "pallas_call")

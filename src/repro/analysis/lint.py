@@ -1,0 +1,75 @@
+"""repro-lint: the static invariant analyzer's CLI driver.
+
+    PYTHONPATH=src python -m repro.analysis.lint [--root DIR] [--only PASS]
+
+Runs three passes and exits non-zero iff any produced a finding:
+
+* ``source``      — AST repo contracts (``source_lint``): jax-free-at-import
+  gates, traced-package purity, fail-fast ordering, docstring coverage.
+* ``fingerprint`` — ChocoConfig / manifest-fingerprint coverage
+  (``fingerprint_lint``).
+* ``invariants``  — engine-invariant registry self-check + committed
+  BENCH_*.json conformance (``invariants``).
+
+The driver imports no jax and compiles nothing: it is fast-tier by
+construction and runs identically over scratch fixture roots (``--root``),
+which is how ``tests/test_analysis_lint.py`` proves each pass actually
+fires.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import fingerprint_lint, invariants, source_lint
+from repro.analysis.findings import Finding, sort_findings
+
+PASSES = {
+    "source": source_lint.run_source_lint,
+    "fingerprint": fingerprint_lint.run_fingerprint_lint,
+    "invariants": invariants.lint_bench_invariants,
+}
+
+#: repo root when invoked in-tree: src/repro/analysis/lint.py -> ../../..
+DEFAULT_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def run_passes(root: str,
+               only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected passes (default: all) over ``root``; findings come
+    back in the stable (path, line, message) order the CLI prints."""
+    names = list(only) if only else list(PASSES)
+    findings: List[Finding] = []
+    for name in names:
+        findings.extend(PASSES[name](root))
+    return sort_findings(findings)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry point; returns the process exit code (0 = clean)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static invariant analyzer for traced code, compiled "
+                    "HLO records, and repo contracts")
+    ap.add_argument("--root", default=DEFAULT_ROOT,
+                    help="repo root to analyze (default: this checkout)")
+    ap.add_argument("--only", action="append", choices=sorted(PASSES),
+                    help="run only this pass (repeatable; default: all)")
+    args = ap.parse_args(argv)
+    findings = run_passes(os.path.abspath(args.root), args.only)
+    for f in findings:
+        print(f.render())
+    ran = ", ".join(args.only) if args.only else "source, fingerprint, "\
+                                                "invariants"
+    if findings:
+        print(f"repro-lint: {len(findings)} finding(s) [{ran}]")
+        return 1
+    print(f"repro-lint: clean [{ran}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,7 @@ from typing import Dict, List
 
 
 def load(path: str) -> List[Dict]:
+    """Load one dry-run JSONL file into a list of record dicts."""
     recs = []
     with open(path) as f:
         for line in f:
@@ -15,6 +16,7 @@ def load(path: str) -> List[Dict]:
 
 
 def fmt_bytes(b):
+    """Human-readable byte count ("1.5MB"); "-" for missing values."""
     if b is None:
         return "-"
     for unit in ("B", "KB", "MB", "GB", "TB"):
@@ -25,6 +27,8 @@ def fmt_bytes(b):
 
 
 def roofline_table(recs: List[Dict]) -> str:
+    """Markdown roofline table (one row per arch x shape, skips/fails
+    annotated) in the EXPERIMENTS.md format."""
     hdr = ("| arch | shape | status | compute s | memory s | collective s | "
            "dominant | useful | state GB/dev | note |\n"
            "|---|---|---|---|---|---|---|---|---|---|\n")
@@ -51,6 +55,7 @@ def roofline_table(recs: List[Dict]) -> str:
 
 
 def dominant_summary(recs: List[Dict]) -> str:
+    """One-line count of which roofline term dominates across records."""
     from collections import Counter
     c = Counter(r["roofline"]["dominant"] for r in recs
                 if r["status"] == "ok" and "roofline" in r)

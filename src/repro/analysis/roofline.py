@@ -21,11 +21,15 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link IC
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+#: HBM bandwidth used by every roofline/traffic model in the repo — the
+#: single source of truth (benchmarks/common.py imports it from here).
+#: Override for other parts with REPRO_HBM_BW (bytes/s).
+HBM_BW = float(os.environ.get("REPRO_HBM_BW", 819e9))
 ICI_BW = 50e9
 
 _DTYPE_BYTES = {
@@ -78,6 +82,13 @@ class CollectiveStats:
 
 
 def parse_collectives(hlo_text: str, n_devices: int = 256) -> CollectiveStats:
+    """Parse collective ops out of HLO text into :class:`CollectiveStats`.
+
+    Counts each launch once (async ``-done`` halves are skipped), sums the
+    shaped buffer bytes per op kind, and applies the module-docstring wire
+    conventions to estimate per-device wire traffic.  ``n_devices`` is the
+    fallback group size when a line carries no ``replica_groups``.
+    """
     counts = {k: 0 for k in _COLLECTIVES}
     buf = {k: 0 for k in _COLLECTIVES}
     wire = {k: 0.0 for k in _COLLECTIVES}
@@ -162,6 +173,8 @@ class Roofline:
 
 
 def analyze(compiled, *, n_devices: int, model_flops: float) -> "tuple[Roofline, CollectiveStats]":
+    """Roofline a compiled executable: cost_analysis() flops/bytes plus the
+    parsed collective wire bytes, under the module's hardware constants."""
     cost = compiled.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]

@@ -1,0 +1,352 @@
+"""AST lint pass: repo contracts that used to exist only as prose.
+
+Four contracts, all checked purely from source text (no imports, no jax —
+the pass runs in milliseconds and works on scratch fixture trees):
+
+* **jax-free-at-import** — the modules the CLI must be able to import
+  before XLA_FLAGS is frozen by the first jax import
+  (``launch/train.py``, ``launch/env.py``, ``kernels/dispatch.py``, and
+  everything under ``configs/``) must not import jax at module scope.
+* **traced purity** — no wall-clock (``time.time`` & friends), stdlib
+  ``random``, or global-state ``np.random`` calls anywhere in ``comm/`` or
+  ``core/``: the round functions there are traced, and a host-side RNG or
+  clock inside them either bakes a constant into the compiled step or
+  breaks the shared-seed determinism contract
+  (docs/ARCHITECTURE.md).  Explicitly seeded ``np.random.default_rng`` is
+  allowed — it is deterministic, host-side builder code.
+* **fail-fast ordering** — every ``SystemExit(2)`` fail-fast in
+  ``launch/train.py::main`` (``parser.error`` calls and literal raises)
+  must execute before the function's first ``import jax``: a validation
+  error that fires after device init is not fail-fast.
+* **docstring coverage** — every module under ``src/repro`` carries a
+  module docstring, and every public top-level function/class is
+  documented.  Dataclasses and NamedTuples are exempt from the *class*
+  docstring requirement (their auto ``__doc__`` is the constructor
+  signature — the same semantics as the historical ``inspect.getdoc``
+  gate in ``tests/test_docs.py``, which now delegates here).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+#: modules (relative to src/repro) whose MODULE SCOPE must stay jax-free;
+#: a trailing "/" gates every .py file under that directory
+JAX_FREE_AT_IMPORT = ("launch/train.py", "launch/env.py",
+                      "kernels/dispatch.py", "configs/")
+
+#: packages whose source is held to the traced-purity contract
+TRACED_PACKAGES = ("comm", "core")
+
+#: time-module attributes that read the wall clock
+_CLOCK_CALLS = ("time", "perf_counter", "monotonic", "time_ns",
+                "perf_counter_ns", "monotonic_ns", "clock")
+
+
+def _src_repro(root: str) -> str:
+    return os.path.join(root, "src", "repro")
+
+
+def _rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def _parse(path: str) -> Optional[ast.Module]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return ast.parse(f.read(), filename=path)
+    except SyntaxError:
+        return None
+
+
+def _python_files(base: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# contract 1: jax-free at import
+# ---------------------------------------------------------------------------
+
+def _module_scope_imports(tree: ast.Module) -> Iterable[ast.stmt]:
+    """Import nodes executed at import time: the module body plus
+    module-level If/Try/With bodies — but never function/class bodies, and
+    never ``if TYPE_CHECKING:`` blocks (those don't run at import)."""
+    stack: List[ast.stmt] = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            yield node
+        elif isinstance(node, ast.If):
+            test = node.test
+            is_tc = (isinstance(test, ast.Name) and test.id == "TYPE_CHECKING") \
+                or (isinstance(test, ast.Attribute)
+                    and test.attr == "TYPE_CHECKING")
+            if not is_tc:
+                stack.extend(node.body)
+            stack.extend(node.orelse)
+        elif isinstance(node, ast.Try):
+            stack.extend(node.body + node.orelse + node.finalbody)
+            for h in node.handlers:
+                stack.extend(h.body)
+        elif isinstance(node, ast.With):
+            stack.extend(node.body)
+
+
+def _imports_jax(node: ast.stmt) -> bool:
+    if isinstance(node, ast.Import):
+        return any(a.name == "jax" or a.name.startswith("jax.")
+                   for a in node.names)
+    if isinstance(node, ast.ImportFrom):
+        mod = node.module or ""
+        return mod == "jax" or mod.startswith("jax.")
+    return False
+
+
+def _gated_files(root: str) -> List[str]:
+    base = _src_repro(root)
+    out = []
+    for entry in JAX_FREE_AT_IMPORT:
+        path = os.path.join(base, *entry.split("/"))
+        if entry.endswith("/"):
+            if os.path.isdir(path):
+                out.extend(_python_files(path))
+        elif os.path.exists(path):
+            out.append(path)
+    return out
+
+
+def lint_jax_free(root: str) -> List[Finding]:
+    """jax-free-at-import findings for the gated module set."""
+    findings = []
+    for path in _gated_files(root):
+        tree = _parse(path)
+        if tree is None:
+            continue
+        for node in _module_scope_imports(tree):
+            if _imports_jax(node):
+                findings.append(Finding(
+                    "source", _rel(root, path), node.lineno,
+                    "module-scope jax import in a jax-free-at-import gated "
+                    "module: the CLI fail-fast matrix and XLA_FLAGS setup "
+                    "import this file before jax — move the import inside "
+                    "the function that needs it"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# contract 2: traced purity (comm/ + core/)
+# ---------------------------------------------------------------------------
+
+def _stdlib_rng_aliases(tree: ast.Module) -> Tuple[set, set, set]:
+    """(time aliases, stdlib-random aliases, numpy aliases) bound at module
+    scope.  ``from jax import random`` binds jax.random, not the stdlib
+    module, so it never lands in the random set."""
+    time_names, random_names, numpy_names = set(), set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                bound = a.asname or a.name.split(".")[0]
+                if a.name == "time" or a.name.startswith("time."):
+                    time_names.add(bound)
+                elif a.name == "random":
+                    random_names.add(bound)
+                elif a.name == "numpy" or a.name.startswith("numpy."):
+                    numpy_names.add(bound)
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod in ("numpy",):
+                for a in node.names:
+                    if a.name == "random":
+                        numpy_names.add("__numpy_random_direct__")
+    return time_names, random_names, numpy_names
+
+
+def lint_traced_purity(root: str,
+                       packages: Tuple[str, ...] = TRACED_PACKAGES
+                       ) -> List[Finding]:
+    """Purity findings for the traced packages: wall-clock reads, stdlib
+    ``random``, and global-state ``np.random`` calls (seeded
+    ``np.random.default_rng`` is explicitly allowed)."""
+    findings = []
+    for pkg in packages:
+        for path in _python_files(os.path.join(_src_repro(root), pkg)):
+            tree = _parse(path)
+            if tree is None:
+                continue
+            time_names, random_names, numpy_names = _stdlib_rng_aliases(tree)
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                if not isinstance(fn, ast.Attribute):
+                    continue
+                msg = None
+                if (isinstance(fn.value, ast.Name)
+                        and fn.value.id in time_names
+                        and fn.attr in _CLOCK_CALLS):
+                    msg = (f"wall-clock call time.{fn.attr}() in a traced "
+                           f"package: a clock read inside a jitted round "
+                           f"function bakes a constant into the compiled "
+                           f"step — time benchmarks in benchmarks/, not "
+                           f"here")
+                elif (isinstance(fn.value, ast.Name)
+                      and fn.value.id in random_names):
+                    msg = (f"stdlib random.{fn.attr}() in a traced package: "
+                           f"host RNG breaks the shared-seed determinism "
+                           f"contract — every draw must come from the "
+                           f"exchange key (jax.random.fold_in)")
+                elif (isinstance(fn.value, ast.Attribute)
+                      and fn.value.attr == "random"
+                      and isinstance(fn.value.value, ast.Name)
+                      and fn.value.value.id in numpy_names
+                      and fn.attr != "default_rng"):
+                    msg = (f"np.random.{fn.attr}() in a traced package: "
+                           f"global-state numpy RNG is neither traceable "
+                           f"nor seed-reproducible — use the exchange key, "
+                           f"or a seeded np.random.default_rng for "
+                           f"host-side builders")
+                if msg:
+                    findings.append(Finding("source", _rel(root, path),
+                                            node.lineno, msg))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# contract 3: fail-fast ordering in launch/train.py::main
+# ---------------------------------------------------------------------------
+
+def lint_failfast_order(root: str,
+                        rel_path: str = "launch/train.py",
+                        func: str = "main") -> List[Finding]:
+    """Every ``parser.error`` / ``raise SystemExit(2)`` in the launcher's
+    ``main`` must precede the function's first ``import jax``."""
+    path = os.path.join(_src_repro(root), *rel_path.split("/"))
+    tree = _parse(path) if os.path.exists(path) else None
+    if tree is None:
+        return []
+    main_fn = next((n for n in tree.body
+                    if isinstance(n, ast.FunctionDef) and n.name == func),
+                   None)
+    if main_fn is None:
+        return []
+    jax_line = None
+    for node in ast.walk(main_fn):
+        if isinstance(node, (ast.Import, ast.ImportFrom)) \
+                and _imports_jax(node):
+            jax_line = node.lineno if jax_line is None \
+                else min(jax_line, node.lineno)
+    if jax_line is None:
+        return []
+    parser_names = set()
+    for node in ast.walk(main_fn):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            callee = node.value.func
+            name = callee.attr if isinstance(callee, ast.Attribute) \
+                else callee.id if isinstance(callee, ast.Name) else ""
+            if name == "ArgumentParser":
+                parser_names.update(t.id for t in node.targets
+                                    if isinstance(t, ast.Name))
+    findings = []
+    for node in ast.walk(main_fn):
+        late = None
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "error"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in parser_names):
+            late = f"{node.func.value.id}.error(...)"
+        elif (isinstance(node, ast.Raise) and isinstance(node.exc, ast.Call)
+              and isinstance(node.exc.func, ast.Name)
+              and node.exc.func.id == "SystemExit"
+              and node.exc.args
+              and isinstance(node.exc.args[0], ast.Constant)
+              and node.exc.args[0].value == 2):
+            late = "raise SystemExit(2)"
+        if late and node.lineno > jax_line:
+            findings.append(Finding(
+                "source", _rel(root, path), node.lineno,
+                f"{late} after the first `import jax` (line {jax_line}): "
+                f"fail-fast validation must run pre-jax, before XLA_FLAGS "
+                f"freeze and device init"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# contract 4: docstring coverage, all src/repro packages
+# ---------------------------------------------------------------------------
+
+def _is_auto_documented_class(node: ast.ClassDef) -> bool:
+    """Dataclasses and NamedTuples synthesize a ``__doc__`` (the
+    constructor signature), which the historical ``inspect.getdoc`` gate
+    accepted — keep that semantics."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) \
+            else target.id if isinstance(target, ast.Name) else ""
+        if name == "dataclass":
+            return True
+    for base in node.bases:
+        name = base.attr if isinstance(base, ast.Attribute) \
+            else base.id if isinstance(base, ast.Name) else ""
+        if name == "NamedTuple":
+            return True
+    return False
+
+
+def repro_packages(root: str) -> List[str]:
+    """Every package directory under src/repro (sorted)."""
+    base = _src_repro(root)
+    if not os.path.isdir(base):
+        return []
+    return sorted(d for d in os.listdir(base)
+                  if os.path.isdir(os.path.join(base, d))
+                  and d != "__pycache__")
+
+
+def docstring_findings(root: str,
+                       packages: Optional[Iterable[str]] = None
+                       ) -> List[Finding]:
+    """Missing-docstring findings for the given packages (default: every
+    package under src/repro)."""
+    pkgs = list(packages) if packages is not None else repro_packages(root)
+    findings = []
+    for pkg in pkgs:
+        for path in _python_files(os.path.join(_src_repro(root), pkg)):
+            tree = _parse(path)
+            if tree is None:
+                continue
+            rel = _rel(root, path)
+            if not (ast.get_docstring(tree) or "").strip():
+                findings.append(Finding(
+                    "source", rel, 1, "missing module docstring"))
+            for node in tree.body:
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef, ast.ClassDef)):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if isinstance(node, ast.ClassDef) \
+                        and _is_auto_documented_class(node):
+                    continue
+                if not (ast.get_docstring(node) or "").strip():
+                    kind = "class" if isinstance(node, ast.ClassDef) \
+                        else "function"
+                    findings.append(Finding(
+                        "source", rel, node.lineno,
+                        f"missing docstring on public {kind} "
+                        f"`{node.name}`"))
+    return findings
+
+
+def run_source_lint(root: str) -> List[Finding]:
+    """All four source contracts over one repo root."""
+    return (lint_jax_free(root) + lint_traced_purity(root)
+            + lint_failfast_order(root) + docstring_findings(root))

@@ -171,6 +171,8 @@ ARCH_IDS = [
 
 
 def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    """Load the named arch's ModelConfig (or its tiny SMOKE_CONFIG) from
+    its ``repro.configs.<arch>`` module, lazily imported."""
     mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
     return mod.SMOKE_CONFIG if smoke else mod.CONFIG
 

@@ -160,6 +160,9 @@ def choco_gossip_round_efficient(state: EfficientGossipState, W: jax.Array,
 def run_choco_gossip_efficient(x0: jax.Array, W: jax.Array, gamma: float,
                                compressor: Compressor, steps: int,
                                key: Optional[jax.Array] = None):
+    """Run ``steps`` rounds of memory-efficient CHOCO-GOSSIP (Algorithm 1
+    with neighbour aggregates s_i instead of all x_hat_j), returning the
+    final state and the per-round consensus-error trace."""
     if key is None:
         key = jax.random.PRNGKey(0)
     xbar = jnp.mean(x0, axis=0, keepdims=True)

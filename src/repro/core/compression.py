@@ -194,6 +194,8 @@ class Compressor:
 
 
 class Identity(Compressor):
+    """No-op compressor: Q(x) = x (omega = 1, exact gossip baseline)."""
+
     name = "identity"
     unbiased = True
     stochastic = False

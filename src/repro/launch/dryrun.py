@@ -1,7 +1,3 @@
-import os
-from repro.launch.env import simulate_host_devices  # jax-free: pre-XLA_FLAGS
-simulate_host_devices(512)
-
 """Multi-pod dry-run: lower + compile every (architecture x input-shape x mesh)
 combination against the production mesh, print memory/cost analysis and the
 roofline terms.  No real allocation: all inputs are ShapeDtypeStructs.
@@ -10,6 +6,10 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --json out.json
 """
+import os
+from repro.launch.env import simulate_host_devices  # jax-free: pre-XLA_FLAGS
+simulate_host_devices(512)
+
 import argparse
 import json
 import sys
@@ -33,6 +33,7 @@ from repro.analysis.roofline import (analyze, model_flops_for, Roofline,
 
 
 def parse_collectives_from(compiled, n_devices):
+    """CollectiveStats for a compiled executable (analysis.roofline)."""
     return parse_collectives(compiled.as_text(), n_devices)
 
 
@@ -44,6 +45,8 @@ def _shard(mesh, tree):
 def lower_train(cfg, shape, mesh, mode: str = "choco",
                 compressor: str = "top_k", comp_kwargs=(("fraction", 0.01),),
                 state_dtype: str = "float32", topology: str = "ring"):
+    """Lower (not compile) one decentralized train step for (cfg, shape)
+    on ``mesh``; returns (lowered, info-dict with arg shapes/specs)."""
     gossip_axis = gossip_axis_for(mesh)
     n_nodes = mesh.shape[gossip_axis]
     if topology == "torus" and "pod" in mesh.axis_names:
@@ -66,6 +69,8 @@ def lower_train(cfg, shape, mesh, mode: str = "choco",
 
 
 def lower_prefill(cfg, shape, mesh, seq_shard: bool = False):
+    """Lower one prefill step (optionally sequence-sharded) against the
+    serving shardings; returns (lowered, info-dict)."""
     model = build_model(cfg)
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     pspecs = param_pspecs(jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg,
@@ -95,6 +100,8 @@ def lower_prefill(cfg, shape, mesh, seq_shard: bool = False):
 
 
 def lower_decode(cfg, shape, mesh, kv_layout: str = "auto"):
+    """Lower one single-token decode step with sharded KV caches; returns
+    (lowered, info-dict)."""
     model = build_model(cfg)
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -132,6 +139,9 @@ def lower_one(arch: str, shape_name: str, mesh, mode: str = "choco",
               unroll: bool = True, overrides: Optional[Dict[str, Any]] = None,
               kv_layout: str = "auto", state_dtype: str = "float32",
               topology: str = "ring"):
+    """Lower + compile one arch x shape combination, collect memory /
+    roofline / collective analysis; returns the JSONL record dict
+    (status ok | skip | fail) that ``analysis.report`` renders."""
     import dataclasses as _dc
     cfg = get_config(arch)
     if unroll:
@@ -271,6 +281,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, mode: str = "choco",
 
 
 def main(argv=None):
+    """CLI driver: dry-run the selected (or all) arch x shape combinations
+    and print/append the roofline records."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
     ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])

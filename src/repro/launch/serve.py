@@ -13,6 +13,8 @@ from repro.launch.env import simulate_host_devices  # jax-free: pre-XLA_FLAGS
 
 
 def main(argv=None):
+    """CLI driver: batched prefill then a greedy decode loop, printing
+    per-phase timings and tokens/s."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")

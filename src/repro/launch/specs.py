@@ -15,10 +15,13 @@ from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
 
 
 def sds(shape, dtype):
+    """Shorthand ShapeDtypeStruct constructor."""
     return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
 
 
 def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int) -> Dict[str, Any]:
+    """Train-batch ShapeDtypeStructs with the leading (n_nodes, ...) node
+    dim, per model family (text / audio / vlm)."""
     assert shape.global_batch % n_nodes == 0, \
         f"global_batch {shape.global_batch} % nodes {n_nodes}"
     b = shape.global_batch // n_nodes
@@ -46,6 +49,7 @@ def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_nodes: int) -> Dict
 
 
 def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Serve-side prefill batch ShapeDtypeStructs (no node dim)."""
     B, S = shape.global_batch, shape.seq_len
     if cfg.family == "audio":
         fe = cfg.frontend

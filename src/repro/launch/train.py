@@ -39,6 +39,8 @@ PROCESS_CHOICES = ("none", "matching", "linkfail", "staleness")
 
 
 def main(argv=None):
+    """CLI driver: validate args jax-free, then build the mesh/trainer and
+    run the decentralized training loop."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",

@@ -1,1 +1,2 @@
+"""Model zoo: family-dispatched builders behind one Model interface."""
 from .transformer import Model, build_model, block_pattern

@@ -17,17 +17,20 @@ from repro.configs.base import ModelConfig
 # ---------------------------------------------------------------------------
 
 def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """Fan-in-scaled normal init (LeCun-style) for dense weights."""
     fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
     return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
 
 
 def rms_norm(x, weight, eps: float):
+    """RMSNorm with (1 + weight) gain, computed in f32."""
     var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
     return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
 
 
 def softcap(x, cap: Optional[float]):
+    """Gemma-style tanh soft-capping; identity when cap is None."""
     if cap is None:
         return x
     return cap * jnp.tanh(x / cap)
@@ -38,6 +41,7 @@ def softcap(x, cap: Optional[float]):
 # ---------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float):
+    """Inverse RoPE frequencies for a head dim under base theta."""
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
 
 
@@ -57,6 +61,7 @@ def apply_rope(x, positions, theta: float):
 # ---------------------------------------------------------------------------
 
 def init_attention(key, cfg: ModelConfig, dtype):
+    """Init one attention block's params (GQA-aware, optional qk-norm)."""
     D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     ks = jax.random.split(key, 6)
     p = {
@@ -235,6 +240,7 @@ def decode_attention(p, x, cfg: ModelConfig, cache_k, cache_v, pos, *,
 # ---------------------------------------------------------------------------
 
 def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    """Init MLP params for the configured type (swiglu/geglu/gelu)."""
     D = cfg.d_model
     F = d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
@@ -247,6 +253,7 @@ def init_mlp(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
 
 
 def mlp(p, x, cfg: ModelConfig):
+    """Apply the configured MLP (swiglu / geglu / plain gelu)."""
     if cfg.mlp_type == "swiglu":
         return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
     if cfg.mlp_type == "geglu":
@@ -259,6 +266,7 @@ def mlp(p, x, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def init_embed(key, cfg: ModelConfig, dtype):
+    """Init token embedding, final norm, and (untied) unembed params."""
     ks = jax.random.split(key, 2)
     p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
          "final_norm": jnp.zeros((cfg.d_model,), dtype)}
@@ -268,6 +276,7 @@ def init_embed(key, cfg: ModelConfig, dtype):
 
 
 def embed_tokens(p, tokens, cfg: ModelConfig):
+    """Token lookup (gemma-style sqrt(D) scaling when embeddings tie)."""
     x = jnp.take(p["tok"], tokens, axis=0)
     if cfg.tie_embeddings:              # gemma-style scaled embedding
         x = x * math.sqrt(cfg.d_model)
@@ -275,6 +284,7 @@ def embed_tokens(p, tokens, cfg: ModelConfig):
 
 
 def logits_from_hidden(p, h, cfg: ModelConfig):
+    """Final norm -> (tied or untied) unembed -> optional logit softcap."""
     h = rms_norm(h, p["final_norm"], cfg.norm_eps)
     w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
     out = h @ w

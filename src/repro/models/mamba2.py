@@ -22,6 +22,7 @@ from .layers import dense_init, rms_norm
 
 
 def init_mamba(key, cfg: ModelConfig, dtype):
+    """Init one Mamba-2 mixer's params (SSD heads, conv, gates)."""
     s = cfg.ssm
     D = cfg.d_model
     di = s.expand * D
@@ -153,6 +154,7 @@ def mamba_forward(p, x, cfg: ModelConfig, want_cache: bool = False):
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    """Zeroed decode cache: SSM state + conv tail for one mixer."""
     s = cfg.ssm
     di = s.expand * cfg.d_model
     H, P, N = di // s.head_dim, s.head_dim, s.d_state

@@ -17,6 +17,7 @@ from .layers import dense_init, init_mlp, mlp
 
 
 def init_moe(key, cfg: ModelConfig, dtype):
+    """Init router (f32) + stacked expert MLP params for one MoE block."""
     m = cfg.moe
     D, E, F = cfg.d_model, m.n_experts, m.d_expert
     ks = jax.random.split(key, 5)

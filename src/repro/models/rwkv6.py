@@ -22,6 +22,7 @@ LORA_R = 32     # low-rank size of the data-dependent mixes/decay
 
 
 def init_rwkv_timemix(key, cfg: ModelConfig, dtype):
+    """Init one RWKV-6 time-mix block (LoRA mixes, decay, bonus, out)."""
     D = cfg.d_model
     H = cfg.n_heads if cfg.n_heads > 0 else D // 64
     P = D // H
@@ -45,6 +46,7 @@ def init_rwkv_timemix(key, cfg: ModelConfig, dtype):
 
 
 def init_rwkv_channelmix(key, cfg: ModelConfig, dtype):
+    """Init one RWKV-6 channel-mix block (token-shift mixes + MLP)."""
     D, F = cfg.d_model, cfg.d_ff
     ks = jax.random.split(key, 4)
     return {
@@ -114,6 +116,7 @@ def timemix_forward(p, x, cfg: ModelConfig, x_prev_last=None, state=None):
 
 
 def channelmix_forward(p, x, x_prev_last=None):
+    """RWKV-6 channel mix over a sequence; returns (out, last token)."""
     B, S, D = x.shape
     x_prev = jnp.concatenate(
         [jnp.zeros((B, 1, D), x.dtype) if x_prev_last is None else x_prev_last[:, None],
@@ -126,6 +129,7 @@ def channelmix_forward(p, x, x_prev_last=None):
 
 
 def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    """Zeroed decode cache: wkv state + token-shift tails per block."""
     D = cfg.d_model
     H = cfg.n_heads
     P = D // H

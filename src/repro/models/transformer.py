@@ -70,6 +70,7 @@ def _cast(p, dt):
 
 
 def init_block(key, kind: str, cfg: ModelConfig, dtype):
+    """Init one block's params for its kind (dense / moe / mamba / rwkv)."""
     D = cfg.d_model
     ks = jax.random.split(key, 4)
     if kind in ("dense_global", "dense_local", "shared"):
@@ -87,6 +88,7 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype):
 
 
 def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    """Zeroed decode cache for one block of the given kind."""
     KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
     if kind in ("dense_global", "moe", "shared"):
         C = max_seq
@@ -369,6 +371,7 @@ class Model:
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    """Construct the family-dispatched Model for a config."""
     return Model(cfg)
 
 

@@ -29,6 +29,7 @@ class Optimizer:
 
 
 def sgd(weight_decay: float = 0.0) -> Optimizer:
+    """Plain SGD (stateless apart from the step count)."""
     def init(params):
         return OptState(mu=None, nu=None, count=jnp.zeros((), jnp.int32))
 
@@ -43,6 +44,7 @@ def sgd(weight_decay: float = 0.0) -> Optimizer:
 
 def momentum_sgd(beta: float = 0.9, weight_decay: float = 0.0,
                  nesterov: bool = False) -> Optimizer:
+    """Heavy-ball (optionally Nesterov) momentum SGD."""
     def init(params):
         return OptState(mu=jax.tree.map(jnp.zeros_like, params), nu=None,
                         count=jnp.zeros((), jnp.int32))
@@ -64,6 +66,7 @@ def momentum_sgd(beta: float = 0.9, weight_decay: float = 0.0,
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
+    """AdamW with f32 moments and bias correction."""
     def init(params):
         z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
         return OptState(mu=z, nu=jax.tree.map(jnp.copy, z),
@@ -88,6 +91,7 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
 
 
 def make_optimizer(name: str, **kw) -> Optimizer:
+    """Optimizer factory by name: sgd | momentum | adamw."""
     return {"sgd": sgd, "momentum": momentum_sgd, "adamw": adamw}[name](**kw)
 
 
@@ -101,12 +105,14 @@ def paper_decay_schedule(m: int, a: float, b: float):
 
 
 def constant_schedule(lr0: float):
+    """Constant learning rate."""
     def lr(t):
         return jnp.float32(lr0)
     return lr
 
 
 def cosine_schedule(lr0: float, warmup: int, total: int):
+    """Linear warmup then cosine decay to zero over ``total`` steps."""
     def lr(t):
         t = t.astype(jnp.float32)
         warm = lr0 * t / max(warmup, 1)

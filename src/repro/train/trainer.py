@@ -27,6 +27,24 @@ from repro.models.transformer import Model
 from repro.optim.sgd import Optimizer, OptState
 from repro.launch.sharding import param_pspecs, batch_pspecs
 
+#: ChocoConfig fields deliberately OUTSIDE the checkpoint fingerprint, with
+#: the reason each omission is safe.  The fingerprint-coverage lint
+#: (analysis/fingerprint_lint.py) enforces that every field is either read
+#: by fingerprint() or listed here — silently un-fingerprinted fields are a
+#: restore-correctness hazard.
+FINGERPRINT_EXEMPT = {
+    "kernel_backend": "execution detail: flipping jnp<->pallas changes "
+                      "neither the state layout nor the wire bytes, so "
+                      "resumes must stay backend-portable",
+    "gossip_axis": "covered structurally: fingerprint() records the mesh "
+                   "axis sizes and the resolved gossip_axes tuple, which "
+                   "subsumes the raw axis-name string",
+    "consensus_gamma": "stepsize override, like lr: it scales the mixing "
+                       "update but changes no state layout, bucket spec, "
+                       "or wire format — resuming under a different gamma "
+                       "is a hyperparameter change, not a shape change",
+}
+
 
 class TrainState(NamedTuple):
     params: Any      # (n_nodes, ...) leaves — the x_i of Algorithm 2
@@ -339,9 +357,11 @@ class DecentralizedTrainer:
             # checkpoint's — restore routes mismatches through the elastic
             # re-mix path.  Packing knobs change the bucket spec the
             # per-bucket gammas are derived from, so they count too.
-            "compressor_config": dict(self.choco.comp_dict()),
+            "compressor_config": dict(self.choco.comp_kwargs),
             "packed_gossip": bool(self.choco.packed_gossip),
             "pack_align": self.choco.pack_align,
+            "exact_small_leaves": bool(self.choco.exact_small_leaves),
+            "small_leaf_threshold": int(self.choco.small_leaf_threshold),
             "pipeline_gossip": bool(self.choco.pipeline_gossip),
             "state_dtype": self.choco.state_dtype,
             "topology_process": self.choco.topology_process,
@@ -418,7 +438,13 @@ class DecentralizedTrainer:
                      == self.choco.pack_align
                      and fp.get("pipeline_gossip",
                                 self.choco.pipeline_gossip)
-                     == bool(self.choco.pipeline_gossip))
+                     == bool(self.choco.pipeline_gossip)
+                     and fp.get("exact_small_leaves",
+                                self.choco.exact_small_leaves)
+                     == bool(self.choco.exact_small_leaves)
+                     and fp.get("small_leaf_threshold",
+                                self.choco.small_leaf_threshold)
+                     == self.choco.small_leaf_threshold)
         same_graph = same_graph and same_proc and same_comp
         if self.mode == "pushsum" and not (same_nodes and same_graph):
             from repro.checkpoint.manifest import ElasticRestoreError

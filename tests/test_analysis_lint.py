@@ -1,0 +1,263 @@
+"""CI gate for ``python -m repro.analysis.lint`` (fast tier).
+
+Two directions:
+  * the LIVE repo is clean — all three passes (source, fingerprint,
+    invariants) report zero findings, and the CLI exits 0.  This is the
+    gate that keeps every repo contract (jax-free-at-import, traced
+    purity, fail-fast ordering, docstring coverage, fingerprint coverage,
+    benchmark-record conformance) enforced from here on;
+  * each pass actually FIRES — scratch fixture trees with forced
+    violations (module-scope ``import jax`` in a gated file, a
+    wall-clock call in a traced package, an un-fingerprinted ChocoConfig
+    field, a doctored benchmark record) must produce a non-zero exit
+    with a pointed finding.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis.lint import run_passes
+from repro.analysis.source_lint import (docstring_findings,
+                                        lint_failfast_order,
+                                        lint_jax_free,
+                                        lint_traced_purity)
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SRC = os.path.join(ROOT, "src")
+
+
+def _run_cli(*args, cwd=ROOT):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-m", "repro.analysis.lint",
+                           *args], env=env, cwd=cwd, capture_output=True,
+                          text=True, timeout=120)
+
+
+def _write(tmp_path, rel, text):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(text))
+    return str(tmp_path)
+
+
+# --------------------------------------------------------------------------
+# the repo is clean
+# --------------------------------------------------------------------------
+
+def test_live_repo_has_zero_findings():
+    findings = run_passes(ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exits_zero_on_live_repo():
+    r = _run_cli("--root", ROOT)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "clean" in r.stdout
+
+
+def test_cli_only_selects_single_pass():
+    r = _run_cli("--root", ROOT, "--only", "invariants")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[invariants]" in r.stdout
+
+
+# --------------------------------------------------------------------------
+# forced violations fire, with pointed findings and non-zero exit
+# --------------------------------------------------------------------------
+
+def test_module_scope_jax_import_in_gated_file_fires(tmp_path):
+    root = _write(tmp_path, "src/repro/configs/evil.py", '''\
+        """A gated config module that illegally imports jax."""
+        import jax
+        ''')
+    findings = lint_jax_free(root)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.path == "src/repro/configs/evil.py" and f.line == 2
+    assert "jax-free-at-import" in f.message
+    # conditional/try nesting at module scope is still module scope
+    root2 = _write(tmp_path / "t2", "src/repro/kernels/dispatch.py", '''\
+        """Gated dispatch with a try-hidden jax import."""
+        try:
+            from jax.experimental import pallas
+        except ImportError:
+            pallas = None
+        ''')
+    assert len(lint_jax_free(root2)) == 1
+    # ...but TYPE_CHECKING blocks don't execute at import
+    root3 = _write(tmp_path / "t3", "src/repro/configs/ok.py", '''\
+        """Gated config with a typing-only jax import (legal)."""
+        from typing import TYPE_CHECKING
+        if TYPE_CHECKING:
+            import jax
+        ''')
+    assert lint_jax_free(root3) == []
+
+
+def test_wall_clock_and_host_rng_in_traced_package_fire(tmp_path):
+    root = _write(tmp_path, "src/repro/core/evil.py", '''\
+        """Traced module breaking the purity contract three ways."""
+        import random
+        import time
+
+        import numpy as np
+
+
+        def round_fn(x):
+            """Bad round function."""
+            t0 = time.time()
+            jitter = random.random()
+            noise = np.random.rand(4)
+            good = np.random.default_rng(0)
+            return x + jitter + noise.sum() + t0
+        ''')
+    findings = lint_traced_purity(root)
+    msgs = [f.message for f in findings]
+    assert len(findings) == 3, msgs
+    assert any("time.time" in m for m in msgs)
+    assert any("random.random" in m for m in msgs)
+    assert any("np.random.rand" in m for m in msgs)
+    # the seeded generator (line 13) was NOT flagged
+    assert 13 not in [f.line for f in findings]
+
+
+def test_jax_random_is_not_mistaken_for_stdlib_random(tmp_path):
+    root = _write(tmp_path, "src/repro/comm/fine.py", '''\
+        """Traced module using jax.random correctly."""
+        from jax import random
+
+
+        def round_fn(key, x):
+            """Draws from the traced key — allowed."""
+            return x + random.normal(key, x.shape)
+        ''')
+    assert lint_traced_purity(root) == []
+
+
+def test_failfast_after_jax_import_fires(tmp_path):
+    root = _write(tmp_path, "src/repro/launch/train.py", '''\
+        """Launcher with a validation error AFTER device init."""
+        import argparse
+
+
+        def main(argv=None):
+            """Bad main."""
+            ap = argparse.ArgumentParser()
+            ap.add_argument("--n", type=int)
+            args = ap.parse_args(argv)
+            import jax
+            if args.n < 0:
+                ap.error("n must be non-negative")
+            if args.n > 99:
+                raise SystemExit(2)
+            return jax.device_count()
+        ''')
+    findings = lint_failfast_order(root)
+    assert len(findings) == 2, [f.render() for f in findings]
+    assert all("after the first `import jax`" in f.message
+               for f in findings)
+
+
+def test_missing_docstrings_fire(tmp_path):
+    root = _write(tmp_path, "src/repro/core/bare.py", '''\
+        import dataclasses
+        from typing import NamedTuple
+
+
+        def naked():
+            return 1
+
+
+        class Undocumented:
+            pass
+
+
+        @dataclasses.dataclass
+        class AutoDoc:
+            x: int = 0
+
+
+        class AutoTuple(NamedTuple):
+            y: int
+        ''')
+    findings = docstring_findings(root)
+    msgs = [f.message for f in findings]
+    # module + naked() + Undocumented fire; dataclass/NamedTuple exempt
+    assert len(findings) == 3, msgs
+    assert any("module docstring" in m for m in msgs)
+    assert any("`naked`" in m for m in msgs)
+    assert any("`Undocumented`" in m for m in msgs)
+
+
+def test_unfingerprinted_choco_field_fires_via_cli(tmp_path):
+    root = _write(tmp_path, "src/repro/configs/base.py", '''\
+        """Scratch ChocoConfig with an uncovered field."""
+        import dataclasses
+
+
+        @dataclasses.dataclass
+        class ChocoConfig:
+            compressor: str = "top_k"
+            new_knob: int = 0
+        ''')
+    _write(tmp_path, "src/repro/train/trainer.py", '''\
+        """Scratch trainer whose fingerprint misses new_knob."""
+        FINGERPRINT_EXEMPT = {}
+
+
+        class DecentralizedTrainer:
+            """Scratch trainer."""
+
+            def fingerprint(self):
+                """Covers compressor only."""
+                return {"compressor": self.choco.compressor}
+        ''')
+    r = _run_cli("--root", root, "--only", "fingerprint")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "ChocoConfig.new_knob" in r.stdout
+    assert "src/repro/configs/base.py:8" in r.stdout
+
+
+def test_doctored_bench_record_fires_via_cli(tmp_path):
+    import json
+    (tmp_path / "BENCH_overlap.json").write_text(json.dumps(
+        {"serial": {"permute_launches": 16, "dots_total": 30,
+                    "dots_feeding_collective": 30},
+         "pipelined": {"permute_launches": 17, "dots_total": 30,
+                       "dots_feeding_collective": 0}}))
+    r = _run_cli("--root", str(tmp_path), "--only", "invariants")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "permute_launches = 17" in r.stdout
+
+
+def test_fingerprint_exemption_contradiction_and_staleness(tmp_path):
+    from repro.analysis.fingerprint_lint import run_fingerprint_lint
+    root = _write(tmp_path, "src/repro/configs/base.py", '''\
+        """Scratch config."""
+        import dataclasses
+
+
+        @dataclasses.dataclass
+        class ChocoConfig:
+            compressor: str = "top_k"
+        ''')
+    _write(tmp_path, "src/repro/train/trainer.py", '''\
+        """Trainer that both fingerprints and exempts, plus a stale entry."""
+        FINGERPRINT_EXEMPT = {
+            "compressor": "covered twice",
+            "ghost_field": "exempts a field that no longer exists",
+        }
+
+
+        class DecentralizedTrainer:
+            """Scratch trainer."""
+
+            def fingerprint(self):
+                """Covers compressor."""
+                return {"compressor": self.choco.compressor}
+        ''')
+    msgs = [f.message for f in run_fingerprint_lint(root)]
+    assert len(msgs) == 2, msgs
+    assert any("both fingerprinted and listed" in m for m in msgs)
+    assert any("ghost_field" in m and "stale exemption" in m for m in msgs)

@@ -386,11 +386,11 @@ def test_async_permute_count_equals_linkfail():
         from repro.comm.async_gossip import StalenessProcess
         from repro.comm.stochastic import LinkFailureProcess
         from repro.core import make_topology, TopK
+        from repro.analysis.hlo_audit import count_permute_launches
 
         def permutes(ex, *args):
             hlo = jax.jit(ex).lower(*args).compile().as_text()
-            return sum(1 for l in hlo.splitlines()
-                       if "collective-permute" in l and "-done" not in l)
+            return count_permute_launches(hlo)
 
         n, d = 8, 256
         sched = compile_schedule(make_topology("ring", n))

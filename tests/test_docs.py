@@ -3,15 +3,16 @@
 Three contracts:
   * every relative markdown link in README / docs/ / EXPERIMENTS / ROADMAP
     resolves to a real file;
-  * every public symbol in the ``comm/``, ``core/`` and ``checkpoint/``
-    packages (and each module itself) carries a docstring — the layers the
-    README points readers at first;
+  * every public symbol in EVERY ``src/repro`` package (and each module
+    itself) carries a docstring — checked per-package through the shared
+    AST gate in ``repro.analysis.source_lint`` (the same pass
+    ``python -m repro.analysis.lint`` runs), so the test suite and the
+    lint CLI can never disagree;
   * the README fail-fast matrix IS the launcher's behaviour: every row is
     run verbatim through ``launch/train.py`` and must exit pre-jax with
     SystemExit(2), and every CLI choice the launcher accepts
     (topologies, processes, modes, engines) is documented in the README.
 """
-import inspect
 import os
 import re
 import shlex
@@ -56,30 +57,24 @@ def test_markdown_links_resolve():
     assert not broken, f"broken relative links: {broken}"
 
 
-@pytest.mark.parametrize("package", ["comm", "core", "checkpoint",
-                                     "kernels"])
-def test_public_api_has_docstrings(package):
-    """Module docstrings + docstrings on every public class/function defined
-    in the package (imported symbols are the defining module's
-    responsibility)."""
-    import importlib
-    import pkgutil
+def _repro_packages():
+    from repro.analysis.source_lint import repro_packages
+    pkgs = repro_packages(ROOT)
+    # the historical gate covered these four; the generalized AST pass
+    # must never cover less
+    assert {"comm", "core", "checkpoint", "kernels"} <= set(pkgs), pkgs
+    return pkgs
 
-    pkg = importlib.import_module(f"repro.{package}")
-    missing = []
-    for info in pkgutil.iter_modules(pkg.__path__):
-        mod = importlib.import_module(f"repro.{package}.{info.name}")
-        if not (mod.__doc__ or "").strip():
-            missing.append(f"{mod.__name__} (module)")
-        for name, obj in vars(mod).items():
-            if name.startswith("_"):
-                continue
-            if not (inspect.isclass(obj) or inspect.isfunction(obj)):
-                continue
-            if getattr(obj, "__module__", None) != mod.__name__:
-                continue
-            if not (inspect.getdoc(obj) or "").strip():
-                missing.append(f"{mod.__name__}.{name}")
+
+@pytest.mark.parametrize("package", _repro_packages())
+def test_public_api_has_docstrings(package):
+    """Module docstrings + docstrings on every public top-level
+    class/function in the package — delegated to the shared AST gate
+    (``repro.analysis.source_lint.docstring_findings``), one package per
+    test so a regression names its package."""
+    from repro.analysis.source_lint import docstring_findings
+
+    missing = [f.render() for f in docstring_findings(ROOT, [package])]
     assert not missing, \
         f"public {package} symbols without docstrings: {missing}"
 

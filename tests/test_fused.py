@@ -172,7 +172,7 @@ def test_fused_launch_count_per_bucket_per_round():
         from repro.comm.gossip import make_gossip_exchange
         from repro.comm.packing import make_bucket_spec
         from repro.core import QSGD
-        from benchmarks.bench_fused import count_pallas_calls
+        from repro.analysis.jaxpr_audit import count_pallas_calls
 
         n, steps = 8, 3
         mesh = jax.make_mesh((8, 1), ("data", "model"))

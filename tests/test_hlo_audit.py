@@ -1,0 +1,235 @@
+"""Parser-regression tests for the shared IR auditors (fast tier).
+
+The HLO/jaxpr parsers in ``repro.analysis.hlo_audit`` /
+``repro.analysis.jaxpr_audit`` back every structural claim the benchmarks
+and invariant suite make (permute launches, wire-gating matmuls, HBM
+streams, pallas launches).  These tests feed them HAND-WRITTEN fixtures —
+fusion-nested permutes, async start/done pairs, while-loop callees,
+int16/bf16 stream lines, duck-typed nested jaxprs — so a parser regression
+is caught without compiling anything or touching a device.
+"""
+import textwrap
+
+from repro.analysis.hlo_audit import (STREAM_THRESHOLD,
+                                      collective_dependency_audit,
+                                      count_dots, count_permute_launches,
+                                      entry_stream_audit, hlo_computations)
+from repro.analysis.jaxpr_audit import count_pallas_calls, count_primitive
+
+import pytest
+
+# --------------------------------------------------------------------------
+# fixtures
+# --------------------------------------------------------------------------
+
+#: a permute hidden inside a fusion computation, plus a while loop whose
+#: body carries the only dot — exercises computation splitting, callee
+#: descent (body=/condition=/calls=), and entry-only counting
+FUSION_NESTED = textwrap.dedent("""\
+    HloModule fusion_nested
+
+    %fused_comp (fp0: f32[128,128]) -> f32[128,128] {
+      %fp0 = f32[128,128]{1,0} parameter(0)
+      ROOT %cp = f32[128,128]{1,0} collective-permute(f32[128,128]{1,0} %fp0), source_target_pairs={{0,1},{1,0}}
+    }
+
+    %while_body (warg: f32[128,128]) -> f32[128,128] {
+      %warg = f32[128,128]{1,0} parameter(0)
+      ROOT %dot.body = f32[128,128]{1,0} dot(f32[128,128]{1,0} %warg, f32[128,128]{1,0} %warg), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    %while_cond (carg: f32[128,128]) -> pred[] {
+      %carg = f32[128,128]{1,0} parameter(0)
+      ROOT %lt = pred[] constant(true)
+    }
+
+    ENTRY %main (p: f32[128,128]) -> f32[128,128] {
+      %p = f32[128,128]{1,0} parameter(0)
+      %w = f32[128,128]{1,0} while(f32[128,128]{1,0} %p), condition=%while_cond, body=%while_body
+      %fus = f32[128,128]{1,0} fusion(f32[128,128]{1,0} %w), kind=kCustom, calls=%fused_comp
+      ROOT %out = f32[128,128]{1,0} add(f32[128,128]{1,0} %fus, f32[128,128]{1,0} %w)
+    }
+    """)
+
+#: one entry-level permute fed by a fusion whose callee holds a dot, plus
+#: an independent dot that must NOT land in the operand closure
+DEPENDENCY = textwrap.dedent("""\
+    HloModule dependency
+
+    %layers (a: f32[64,64]) -> f32[64,64] {
+      %a = f32[64,64]{1,0} parameter(0)
+      ROOT %dot.inner = f32[64,64]{1,0} dot(f32[64,64]{1,0} %a, f32[64,64]{1,0} %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    ENTRY %step (x: f32[64,64], y: f32[64,64]) -> f32[64,64] {
+      %x = f32[64,64]{1,0} parameter(0)
+      %y = f32[64,64]{1,0} parameter(1)
+      %dot.free = f32[64,64]{1,0} dot(f32[64,64]{1,0} %y, f32[64,64]{1,0} %y), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %h = f32[64,64]{1,0} fusion(f32[64,64]{1,0} %x), kind=kLoop, calls=%layers
+      %q = f32[64,64]{1,0} add(f32[64,64]{1,0} %h, f32[64,64]{1,0} %x)
+      %cp.1 = f32[64,64]{1,0} collective-permute(f32[64,64]{1,0} %q), source_target_pairs={{0,1},{1,0}}
+      ROOT %r = f32[64,64]{1,0} add(f32[64,64]{1,0} %cp.1, f32[64,64]{1,0} %dot.free)
+    }
+    """)
+
+#: an async start/done pair — one launch, not two
+ASYNC_PAIR = textwrap.dedent("""\
+    HloModule async_pair
+
+    ENTRY %async (p: f32[32]) -> f32[32] {
+      %p = f32[32]{0} parameter(0)
+      %cps = (f32[32]{0}, f32[32]{0}) collective-permute-start(f32[32]{0} %p), source_target_pairs={{0,1}}
+      ROOT %cpd = f32[32]{0} collective-permute-done((f32[32]{0}, f32[32]{0}) %cps)
+    }
+    """)
+
+#: full-size f32 / bf16 / s16 stream lines above and below the threshold,
+#: plus the plumbing (parameters, get-tuple-element, ROOT tuple) that must
+#: never count
+STREAMS = textwrap.dedent("""\
+    HloModule streams
+
+    ENTRY %main (p0: f32[16384], p1: bf16[32768]) -> (f32[16384]) {
+      %p0 = f32[16384]{0} parameter(0)
+      %p1 = bf16[32768]{0} parameter(1)
+      %a = f32[16384]{0} add(f32[16384]{0} %p0, f32[16384]{0} %p0)
+      %c = bf16[32768]{0} convert(f32[16384]{0} %a)
+      %d = s16[16384]{0} convert(f32[16384]{0} %a)
+      %small = f32[128]{0} slice(f32[16384]{0} %a), slice={[0:128]}
+      %g = f32[16384]{0} get-tuple-element((f32[16384]{0}) %t), index=0
+      ROOT %tuple.9 = (f32[16384]{0}) tuple(f32[16384]{0} %a)
+    }
+    """)
+
+
+# --------------------------------------------------------------------------
+# hlo_computations / permute counting
+# --------------------------------------------------------------------------
+
+def test_computation_split_keys_entry_twice():
+    comps = hlo_computations(FUSION_NESTED)
+    assert "__entry__" in comps and "main" in comps
+    assert comps["__entry__"] is comps["main"]
+    assert set(comps) >= {"fused_comp", "while_body", "while_cond"}
+
+
+def test_fusion_nested_permute_counts_whole_module_not_entry():
+    assert count_permute_launches(FUSION_NESTED) == 1
+    assert count_permute_launches(FUSION_NESTED, entry_only=True) == 0
+
+
+def test_async_start_done_pair_counts_once():
+    assert count_permute_launches(ASYNC_PAIR) == 1
+    assert count_permute_launches(ASYNC_PAIR, entry_only=True) == 1
+
+
+def test_count_dots_descends_into_while_callees():
+    comps = hlo_computations(FUSION_NESTED)
+    # the only dot lives in the while body, reached via body=%while_body
+    assert count_dots(comps, "__entry__") == 1
+    assert count_dots(comps, "while_body") == 1
+    assert count_dots(comps, "fused_comp") == 0
+
+
+# --------------------------------------------------------------------------
+# collective_dependency_audit
+# --------------------------------------------------------------------------
+
+def test_dependency_audit_separates_feeding_from_free_dots():
+    audit = collective_dependency_audit(DEPENDENCY)
+    assert audit.permute_launches == 1
+    assert audit.dots_total == 2          # dot.free + layers' dot.inner
+    # only the fusion on the permute's operand path gates the wire
+    assert audit.dots_feeding_collective == 1
+    assert audit.as_dict() == {"permute_launches": 1, "dots_total": 2,
+                               "dots_feeding_collective": 1}
+
+
+def test_dependency_audit_zero_when_no_permute_in_entry():
+    audit = collective_dependency_audit(FUSION_NESTED)
+    # the permute is fusion-nested, not an entry def: nothing to gate
+    assert audit.permute_launches == 0
+    assert audit.dots_feeding_collective == 0
+    assert audit.dots_total == 1
+
+
+# --------------------------------------------------------------------------
+# entry_stream_audit
+# --------------------------------------------------------------------------
+
+def test_stream_audit_default_f32_only():
+    rec = entry_stream_audit(STREAMS)
+    # %a: 1 write + 2 reads; %c and %d: their f32 operand is the line's
+    # FIRST f32 match, so it counts as the write slot (documented quirky
+    # semantics, load-bearing for BENCH_fused.json bit-reproducibility);
+    # %small's def is sub-threshold but its operand read is full-size;
+    # %g / parameters / ROOT tuple skipped.
+    assert rec == {"streams": 6, "reads": 3, "writes": 3,
+                   "bytes": 6 * 16384 * 4}
+
+
+def test_stream_audit_sees_bf16_and_s16_when_asked():
+    rec = entry_stream_audit(STREAMS, dtypes=("f32", "bf16", "s16"))
+    # vs the f32 audit: %c now writes bf16[32768] and reads f32[16384];
+    # %d writes s16[16384] and reads f32[16384]
+    assert rec["writes"] == 3 and rec["reads"] == 5
+    assert rec["streams"] == 8
+    assert rec["bytes"] == (16384 * 4 * 6       # the six f32 streams
+                            + 32768 * 2         # bf16 write
+                            + 16384 * 2)        # s16 write
+
+
+def test_stream_audit_threshold_is_inclusive():
+    rec = entry_stream_audit(STREAMS, threshold=STREAM_THRESHOLD + 1)
+    # only the bf16 line is above 16384 elements, and it's dtype-filtered
+    assert rec == {"streams": 0, "reads": 0, "writes": 0, "bytes": 0}
+
+
+def test_stream_audit_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="f4"):
+        entry_stream_audit(STREAMS, dtypes=("f4",))
+
+
+# --------------------------------------------------------------------------
+# jaxpr audit (duck-typed — no jax import needed)
+# --------------------------------------------------------------------------
+
+class _Prim:
+    def __init__(self, name):
+        self.name = name
+
+
+class _Eqn:
+    def __init__(self, name, params=None):
+        self.primitive = _Prim(name)
+        self.params = params or {}
+
+
+class _Jaxpr:
+    def __init__(self, eqns):
+        self.eqns = eqns
+
+
+class _Closed:
+    def __init__(self, jaxpr):
+        self.jaxpr = jaxpr
+
+
+def test_count_pallas_calls_recurses_through_nested_params():
+    inner = _Jaxpr([_Eqn("pallas_call"), _Eqn("add")])
+    # nested as: raw jaxpr, ClosedJaxpr-ish wrapper, and a list of both —
+    # the three shapes scan/cond/pjit params actually take
+    outer = _Jaxpr([
+        _Eqn("pallas_call"),
+        _Eqn("scan", {"jaxpr": _Closed(inner)}),
+        _Eqn("cond", {"branches": [_Closed(inner), inner]}),
+        _Eqn("mul", {"irrelevant": 7}),
+    ])
+    assert count_pallas_calls(outer) == 1 + 1 + 2
+
+
+def test_count_primitive_counts_other_primitives_too():
+    inner = _Jaxpr([_Eqn("ppermute")])
+    outer = _Jaxpr([_Eqn("ppermute"), _Eqn("pjit", {"jaxpr": inner})])
+    assert count_primitive(outer, "ppermute") == 2
+    assert count_primitive(outer, "pallas_call") == 0

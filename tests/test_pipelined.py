@@ -391,7 +391,7 @@ def test_pipelined_collective_is_batch_independent():
         from repro.optim import make_optimizer, cosine_schedule
         from repro.data.synthetic import make_lm_batch_fn
         from repro.launch.mesh import make_mesh
-        from benchmarks.bench_overlap import audit_hlo_text
+        from repro.analysis.hlo_audit import collective_dependency_audit
 
         cfg = get_config("qwen3-1.7b", smoke=True)
         model = build_model(cfg)
@@ -412,7 +412,7 @@ def test_pipelined_collective_is_batch_independent():
             step = tr.jitted_train_step(jax.eval_shape(lambda: state),
                                         jax.eval_shape(lambda: batch))
             hlo = step.lower(state, batch).compile().as_text()
-            res["pipelined" if pipe else "serial"] = audit_hlo_text(hlo)
+            res["pipelined" if pipe else "serial"] = collective_dependency_audit(hlo).as_dict()
         print("AUDIT=" + json.dumps(res))
     """)
     import json
