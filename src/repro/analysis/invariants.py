@@ -35,6 +35,7 @@ CONTEXT_VARS = {
     "rounds": 2,         # compiled schedule rounds
     "dots_total": 30,    # total matmuls in the compiled step
     "baseline": 16,      # reference engine's measurement (parity checks)
+    "budget": 3,         # diag-step collective-launch budget (telemetry)
 }
 
 
@@ -93,6 +94,21 @@ ENGINE_INVARIANTS: Tuple[EngineInvariant, ...] = (
                     "lax.switch — the entry computation carries zero "
                     "unconditional permute launches",
         expect=(("entry_permute_launches", "0"),)),
+    EngineInvariant(
+        engine="telemetry_off", backend="*",
+        description="telemetry subsystem: with diagnostics off, the "
+                    "compiled train-step HLO is byte-identical to a build "
+                    "that never constructed the diagnostics executable — "
+                    "observability must cost nothing when unused",
+        expect=(("hlo_identical", "1"),)),
+    EngineInvariant(
+        engine="telemetry_diag", backend="*",
+        description="diagnostics executable: reductions only — zero "
+                    "permute launches, and its collective launches stay "
+                    "within the per-tap budget recorded when the "
+                    "benchmark was run",
+        expect=(("permute_launches", "0"),
+                ("collective_launches", "budget"))),
 )
 
 
@@ -235,11 +251,36 @@ def _bench_fused_findings(root: str) -> List[Finding]:
     return findings
 
 
+def _bench_telemetry_findings(root: str) -> List[Finding]:
+    path = os.path.join(root, "BENCH_telemetry.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rec = json.load(f)
+    findings = []
+    parity, diag = rec.get("parity", {}), rec.get("diag", {})
+    ctx = dict(CONTEXT_VARS)
+    # budget comes from the record itself (like the overlap baseline): a
+    # doctored collective count that disagrees with its own budget fails
+    ctx["budget"] = diag.get("collective_budget", 0)
+    measured = {"hlo_identical": int(parity.get("hlo_identical", -1)),
+                "permute_launches": diag.get("permute_launches", -1),
+                "collective_launches": diag.get("collective_launches", -1)}
+    for v in check_invariant(get_invariant("telemetry_off", "jnp"),
+                             measured, ctx):
+        findings.append(Finding("invariants", "BENCH_telemetry.json", 0, v))
+    for v in check_invariant(get_invariant("telemetry_diag", "jnp"),
+                             measured, ctx):
+        findings.append(Finding("invariants", "BENCH_telemetry.json", 0, v))
+    return findings
+
+
 def lint_bench_invariants(root: str) -> List[Finding]:
     """The invariant lint pass: the registry is well-formed and the
-    committed benchmark records (BENCH_overlap.json / BENCH_fused.json)
-    still satisfy the contracts they were measured under.  A doctored or
-    regressed record — e.g. a wrong permute-launch count, a non-zero
-    gated-matmul count for the pipelined engine — is a finding."""
+    committed benchmark records (BENCH_overlap.json / BENCH_fused.json /
+    BENCH_telemetry.json) still satisfy the contracts they were measured
+    under.  A doctored or regressed record — e.g. a wrong permute-launch
+    count, a non-zero gated-matmul count for the pipelined engine, or a
+    telemetry record claiming HLO parity it doesn't have — is a finding."""
     return (_registry_findings() + _bench_overlap_findings(root)
-            + _bench_fused_findings(root))
+            + _bench_fused_findings(root) + _bench_telemetry_findings(root))

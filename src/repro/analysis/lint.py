@@ -2,12 +2,16 @@
 
     PYTHONPATH=src python -m repro.analysis.lint [--root DIR] [--only PASS]
 
-Runs three passes and exits non-zero iff any produced a finding:
+Runs four passes and exits non-zero iff any produced a finding:
 
 * ``source``      — AST repo contracts (``source_lint``): jax-free-at-import
-  gates, traced-package purity, fail-fast ordering, docstring coverage.
+  gates, traced-package purity (clocks/RNG/file-I/O), fail-fast ordering,
+  docstring coverage.
 * ``fingerprint`` — ChocoConfig / manifest-fingerprint coverage
   (``fingerprint_lint``).
+* ``metrics``     — the obs metric registry vs the emit sites
+  (``metrics_lint``): unregistered emitted keys and stale registry
+  entries are findings.
 * ``invariants``  — engine-invariant registry self-check + committed
   BENCH_*.json conformance (``invariants``).
 
@@ -23,12 +27,14 @@ import os
 import sys
 from typing import List, Optional, Sequence
 
-from repro.analysis import fingerprint_lint, invariants, source_lint
+from repro.analysis import (fingerprint_lint, invariants, metrics_lint,
+                            source_lint)
 from repro.analysis.findings import Finding, sort_findings
 
 PASSES = {
     "source": source_lint.run_source_lint,
     "fingerprint": fingerprint_lint.run_fingerprint_lint,
+    "metrics": metrics_lint.run_metrics_lint,
     "invariants": invariants.lint_bench_invariants,
 }
 
@@ -62,8 +68,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     findings = run_passes(os.path.abspath(args.root), args.only)
     for f in findings:
         print(f.render())
-    ran = ", ".join(args.only) if args.only else "source, fingerprint, "\
-                                                "invariants"
+    ran = ", ".join(args.only if args.only else PASSES)
     if findings:
         print(f"repro-lint: {len(findings)} finding(s) [{ran}]")
         return 1

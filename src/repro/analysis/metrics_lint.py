@@ -1,0 +1,166 @@
+"""Metrics-schema lint pass: the registry in ``obs/schema.py`` and the
+emit sites agree, statically.
+
+:func:`validate_record` already rejects unregistered keys at runtime —
+but only on code paths a test actually runs.  This pass closes the gap
+from source text alone (no imports, works on scratch fixture roots):
+
+* the ``METRIC_SPECS`` literal is well-formed — every entry a
+  ``MetricSpec`` call with a constant ``<namespace>/<snake_case>`` name,
+  non-empty units and description, no duplicates;
+* every metric-key string literal in the emitting packages (``obs``,
+  ``launch``, ``train``) is registered — an unregistered emit is a
+  finding at the emit site;
+* every registered name is emitted somewhere — a stale registry entry
+  (metric renamed or deleted without pruning the schema) is a finding at
+  its ``MetricSpec`` line.
+
+Only string literals whose namespace prefix is registered count as emit
+sites, so ordinary path-ish strings (``"launch/env"``) never false-
+positive unless they collide with a live metric namespace — which is the
+collision the pass exists to surface.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.findings import Finding
+
+#: where the registry literal lives, relative to src/repro
+SCHEMA_REL = "obs/schema.py"
+
+#: packages whose string literals are scanned as candidate emit sites
+EMIT_PACKAGES = ("obs", "launch", "train")
+
+#: mirrors obs.schema.METRIC_KEY_RE (kept literal: this pass must not
+#: import the module it lints)
+_KEY_RE = re.compile(r"^[a-z]+/[a-z0-9_]+$")
+
+
+def _parse(path: str) -> Optional[ast.Module]:
+    try:
+        with open(path, encoding="utf-8") as f:
+            return ast.parse(f.read(), filename=path)
+    except (SyntaxError, OSError):
+        return None
+
+
+def _const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _spec_entries(tree: ast.Module, rel: str
+                  ) -> Tuple[Dict[str, int], List[Finding]]:
+    """(registered name -> lineno, findings) from the METRIC_SPECS
+    literal.  A missing or non-tuple METRIC_SPECS is itself a finding —
+    the registry is load-bearing."""
+    assign = None
+    for node in tree.body:
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target] if isinstance(node, ast.AnnAssign)
+                   else [])
+        if any(isinstance(t, ast.Name) and t.id == "METRIC_SPECS"
+               for t in targets):
+            assign = node
+    if assign is None or not isinstance(assign.value, (ast.Tuple, ast.List)):
+        return {}, [Finding("metrics", rel, 1,
+                            "METRIC_SPECS tuple literal not found: the "
+                            "metric registry must stay a parseable literal")]
+    names: Dict[str, int] = {}
+    findings: List[Finding] = []
+    for el in assign.value.elts:
+        line = getattr(el, "lineno", assign.lineno)
+        if not (isinstance(el, ast.Call) and len(el.args) == 3
+                and not el.keywords):
+            findings.append(Finding(
+                "metrics", rel, line,
+                "malformed registry entry: expected "
+                "MetricSpec(name, units, description) with three "
+                "positional string literals"))
+            continue
+        name, units, desc = (_const_str(a) for a in el.args)
+        if name is None or units is None or desc is None:
+            findings.append(Finding(
+                "metrics", rel, line,
+                "registry entry fields must be string literals (the pass "
+                "reads them without importing the module)"))
+            continue
+        if not _KEY_RE.match(name):
+            findings.append(Finding(
+                "metrics", rel, line,
+                f"metric name {name!r} does not match "
+                f"<namespace>/<snake_case> ({_KEY_RE.pattern})"))
+            continue
+        if not units.strip() or not desc.strip():
+            findings.append(Finding(
+                "metrics", rel, line,
+                f"metric {name!r} needs non-empty units and description "
+                f"(the registry is the documentation of record)"))
+        if name in names:
+            findings.append(Finding(
+                "metrics", rel, line, f"duplicate metric name {name!r}"))
+            continue
+        names[name] = line
+    return names, findings
+
+
+def _python_files(base: str) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def run_metrics_lint(root: str) -> List[Finding]:
+    """The full pass over one repo root: registry shape, unregistered
+    emits, stale entries."""
+    src = os.path.join(root, "src", "repro")
+    schema_path = os.path.join(src, *SCHEMA_REL.split("/"))
+    if not os.path.exists(schema_path):
+        return []    # fixture roots without an obs package have no contract
+    tree = _parse(schema_path)
+    if tree is None:
+        return [Finding("metrics", f"src/repro/{SCHEMA_REL}", 1,
+                        "schema module failed to parse")]
+    rel_schema = f"src/repro/{SCHEMA_REL}"
+    names, findings = _spec_entries(tree, rel_schema)
+    namespaces = {n.split("/", 1)[0] for n in names}
+
+    emitted: Dict[str, Tuple[str, int]] = {}
+    for pkg in EMIT_PACKAGES:
+        for path in _python_files(os.path.join(src, pkg)):
+            if os.path.abspath(path) == os.path.abspath(schema_path):
+                continue
+            mod = _parse(path)
+            if mod is None:
+                continue
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            for node in ast.walk(mod):
+                key = _const_str(node)
+                if key is None or not _KEY_RE.match(key):
+                    continue
+                if key.split("/", 1)[0] not in namespaces:
+                    continue
+                if key not in names:
+                    findings.append(Finding(
+                        "metrics", rel, node.lineno,
+                        f"emitted metric key {key!r} is not registered: "
+                        f"add a MetricSpec (name, units, description) to "
+                        f"obs/schema.py"))
+                emitted.setdefault(key, (rel, node.lineno))
+    for name, line in names.items():
+        if name not in emitted:
+            findings.append(Finding(
+                "metrics", rel_schema, line,
+                f"stale registry entry {name!r}: no emit site in "
+                f"{'/'.join(EMIT_PACKAGES)} references it — prune it or "
+                f"wire the metric up"))
+    return findings

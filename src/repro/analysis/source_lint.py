@@ -5,15 +5,20 @@ the pass runs in milliseconds and works on scratch fixture trees):
 
 * **jax-free-at-import** — the modules the CLI must be able to import
   before XLA_FLAGS is frozen by the first jax import
-  (``launch/train.py``, ``launch/env.py``, ``kernels/dispatch.py``, and
-  everything under ``configs/``) must not import jax at module scope.
+  (``launch/train.py``, ``launch/serve.py``, ``launch/env.py``,
+  ``kernels/dispatch.py``, the host-side ``obs`` modules, and everything
+  under ``configs/``) must not import jax at module scope.
 * **traced purity** — no wall-clock (``time.time`` & friends), stdlib
-  ``random``, or global-state ``np.random`` calls anywhere in ``comm/`` or
-  ``core/``: the round functions there are traced, and a host-side RNG or
-  clock inside them either bakes a constant into the compiled step or
-  breaks the shared-seed determinism contract
-  (docs/ARCHITECTURE.md).  Explicitly seeded ``np.random.default_rng`` is
-  allowed — it is deterministic, host-side builder code.
+  ``random``, global-state ``np.random``, or ``open()`` file-I/O calls
+  anywhere in ``comm/``, ``core/``, or ``obs/``: the round functions
+  there are traced, and a host-side RNG, clock, or file handle inside
+  them either bakes a constant into the compiled step or breaks the
+  shared-seed determinism contract (docs/ARCHITECTURE.md).  Explicitly
+  seeded ``np.random.default_rng`` is allowed — it is deterministic,
+  host-side builder code.  The obs sink/timer/trace modules are
+  host-side *by design* (wall clocks and file writes are their whole
+  job) and sit on :data:`TRACED_PURITY_EXEMPT`; only the traced
+  ``obs/metrics.py`` is held to the contract.
 * **fail-fast ordering** — every ``SystemExit(2)`` fail-fast in
   ``launch/train.py::main`` (``parser.error`` calls and literal raises)
   must execute before the function's first ``import jax``: a validation
@@ -35,11 +40,19 @@ from repro.analysis.findings import Finding
 
 #: modules (relative to src/repro) whose MODULE SCOPE must stay jax-free;
 #: a trailing "/" gates every .py file under that directory
-JAX_FREE_AT_IMPORT = ("launch/train.py", "launch/env.py",
-                      "kernels/dispatch.py", "configs/")
+JAX_FREE_AT_IMPORT = ("launch/train.py", "launch/serve.py", "launch/env.py",
+                      "kernels/dispatch.py", "configs/",
+                      "obs/__init__.py", "obs/schema.py", "obs/sinks.py",
+                      "obs/timers.py", "obs/trace.py")
 
 #: packages whose source is held to the traced-purity contract
-TRACED_PACKAGES = ("comm", "core")
+TRACED_PACKAGES = ("comm", "core", "obs")
+
+#: files inside TRACED_PACKAGES that are host-side by design (metric
+#: sinks, step timers, profiler drivers): wall clocks and file I/O are
+#: their job, so the purity contract skips them — everything else under
+#: obs (notably the traced obs/metrics.py) stays gated
+TRACED_PURITY_EXEMPT = ("obs/sinks.py", "obs/timers.py", "obs/trace.py")
 
 #: time-module attributes that read the wall clock
 _CLOCK_CALLS = ("time", "perf_counter", "monotonic", "time_ns",
@@ -174,11 +187,16 @@ def lint_traced_purity(root: str,
                        packages: Tuple[str, ...] = TRACED_PACKAGES
                        ) -> List[Finding]:
     """Purity findings for the traced packages: wall-clock reads, stdlib
-    ``random``, and global-state ``np.random`` calls (seeded
-    ``np.random.default_rng`` is explicitly allowed)."""
+    ``random``, global-state ``np.random``, and ``open()`` file-I/O calls
+    (seeded ``np.random.default_rng`` is explicitly allowed; the
+    host-side obs modules on :data:`TRACED_PURITY_EXEMPT` are skipped)."""
     findings = []
     for pkg in packages:
         for path in _python_files(os.path.join(_src_repro(root), pkg)):
+            rel_in_src = os.path.relpath(
+                path, _src_repro(root)).replace(os.sep, "/")
+            if rel_in_src in TRACED_PURITY_EXEMPT:
+                continue
             tree = _parse(path)
             if tree is None:
                 continue
@@ -187,6 +205,13 @@ def lint_traced_purity(root: str,
                 if not isinstance(node, ast.Call):
                     continue
                 fn = node.func
+                if isinstance(fn, ast.Name) and fn.id == "open":
+                    findings.append(Finding(
+                        "source", _rel(root, path), node.lineno,
+                        "open() in a traced package: file I/O belongs in "
+                        "the host-side sink modules (obs/sinks.py, "
+                        "checkpoint/), never in traced round functions"))
+                    continue
                 if not isinstance(fn, ast.Attribute):
                     continue
                 msg = None

@@ -392,18 +392,25 @@ def bucket_omega_worst(spec: BucketSpec, compressor: Compressor) -> float:
     return min(omegas) if omegas else 1.0
 
 
-def packed_wire_bits(spec: BucketSpec, compressor: Compressor) -> int:
-    """Analytic bits-on-the-wire of one packed exchange (all buckets)."""
-    total = 0
+def bucket_wire_bits(spec: BucketSpec, compressor: Compressor) -> List[int]:
+    """Analytic bits-on-the-wire per bucket, in bucket order — the
+    per-bucket twin of :func:`bucket_omegas`, consumed by the telemetry
+    run header (``obs/metrics.py::bucket_telemetry``)."""
+    bits = []
     for b in spec.buckets:
         if b.exact:
-            total += b.logical * jnp.dtype(b.dtype).itemsize * 8
+            bits.append(b.logical * jnp.dtype(b.dtype).itemsize * 8)
         elif isinstance(compressor, (TopK, RandK)):
             # mirrors compress_bucket: coordinate budget resolved per slot
-            total += sum(compressor.wire_bits(s.size)
-                         for s in spec.bucket_slots(b.index))
+            bits.append(sum(compressor.wire_bits(s.size)
+                            for s in spec.bucket_slots(b.index)))
         elif isinstance(compressor, (BlockTopK, QSGD, SignNorm)):
-            total += compressor.wire_bits(b.logical)
+            bits.append(compressor.wire_bits(b.logical))
         else:
-            total += compressor.wire_bits(b.size)
-    return int(total)
+            bits.append(compressor.wire_bits(b.size))
+    return [int(x) for x in bits]
+
+
+def packed_wire_bits(spec: BucketSpec, compressor: Compressor) -> int:
+    """Analytic bits-on-the-wire of one packed exchange (all buckets)."""
+    return sum(bucket_wire_bits(spec, compressor))

@@ -293,6 +293,10 @@ def main(argv=None):
     ap.add_argument("--fraction", type=float, default=0.01)
     ap.add_argument("--qsgd-s", type=int, default=None)
     ap.add_argument("--json", default=None, help="append records to this JSON-lines file")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="also emit compile/total timings as registry-"
+                         "validated metric records (obs/schema.py) to "
+                         "metrics.jsonl in this directory")
     ap.add_argument("--kv-layout", default="auto", choices=["auto", "head", "seq"])
     ap.add_argument("--state-dtype", default="float32",
                     choices=["float32", "bfloat16"])
@@ -321,8 +325,17 @@ def main(argv=None):
             pass
         overrides[k] = v
 
+    mlog = None
+    if args.metrics_dir:
+        from repro.obs.sinks import JsonlSink, MetricLog
+        mlog = MetricLog([JsonlSink(os.path.join(args.metrics_dir,
+                                                 "metrics.jsonl"))])
+        mlog.header(tool="dryrun", jax_version=jax.__version__,
+                    multi_pod=args.multi_pod, mode=args.mode,
+                    compressor=args.compressor)
+
     records = []
-    for arch, shp in combos:
+    for i, (arch, shp) in enumerate(combos):
         rec = run_one(arch, shp, multi_pod=args.multi_pod, mode=args.mode,
                       compressor=args.compressor, comp_kwargs=comp_kwargs,
                       overrides=overrides or None, kv_layout=args.kv_layout,
@@ -331,6 +344,12 @@ def main(argv=None):
         if args.json:
             with open(args.json, "a") as f:
                 f.write(json.dumps(rec) + "\n")
+        if mlog is not None and rec.get("status") == "ok":
+            mlog.emit(i, {"dryrun/compile_s": float(rec["compile_s"]),
+                          "dryrun/total_s": float(rec["total_s"])},
+                      extra={"arch": arch, "shape": shp, "mesh": rec["mesh"]})
+    if mlog is not None:
+        mlog.close()
 
     n_fail = sum(r["status"] == "fail" for r in records)
     print(f"\n== {len(records)} combos: "

@@ -20,14 +20,16 @@ x_hat/s re-zeroed + consensus warmup — checkpoint/elastic.py):
         --resume ckpts/step60 --checkpoint-dir ckpts --checkpoint-every 20
 """
 import argparse
-import dataclasses
 import os
 import sys
-import time
 
 # jax-free imports: safe before XLA_FLAGS is frozen by the first jax import
 from repro.configs.base import parse_topology
 from repro.launch.env import simulate_host_devices
+from repro.obs.sinks import (DivergenceMonitor, JsonlSink, MetricLog,
+                             StdoutSink)
+from repro.obs.timers import StepTimer
+from repro.obs.trace import ProfileSession
 
 # mirrors core.topology._TOPOLOGIES; kept literal so arg validation never
 # imports jax before XLA_FLAGS is set
@@ -36,6 +38,30 @@ TOPOLOGY_CHOICES = ("ring", "torus", "hypercube", "star", "chain",
 # mirrors core.topology.DIRECTED_TOPOLOGIES (column-stochastic: push-sum only)
 DIRECTED_CHOICES = ("directed_ring", "random_digraph")
 PROCESS_CHOICES = ("none", "matching", "linkfail", "staleness")
+
+
+def _stdout_line(record):
+    """Stdout rendering of structured records: log lines verbatim, train
+    metric records in the historical ``[train] step ...`` format, diag
+    records as one compact line; header records are file-only."""
+    kind = record.get("kind")
+    if kind == "log":
+        return record.get("msg", "")
+    if kind != "metrics":
+        return None
+    if "train/loss" in record:
+        tail = (f"{record['train/s_per_step']:.2f}s/step"
+                if "train/s_per_step" in record
+                else f"compile {record['train/compile_s']:.2f}s")
+        return (f"[train] step {record['step']:5d} "
+                f"loss {record['train/loss']:.4f} "
+                f"lr {record['train/lr']:.4f} ({tail})")
+    if "diag/consensus_dist" in record:
+        parts = " ".join(f"{k.split('/', 1)[1]} {v:.3e}"
+                         for k, v in sorted(record.items())
+                         if k.startswith("diag/"))
+        return f"[diag] step {record['step']} {parts}"
+    return None
 
 
 def main(argv=None):
@@ -131,6 +157,28 @@ def main(argv=None):
                     help=">0: simulate N host devices (CPU testing)")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 4x2 => (data=4, model=2); default: production")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="write a structured JSONL run log (metrics.jsonl: "
+                         "header record + registry-validated metric records, "
+                         "obs/schema.py) alongside the stdout lines")
+    ap.add_argument("--diag-every", type=int, default=0,
+                    help="run the jitted Lyapunov/consensus diagnostics "
+                         "(obs/metrics.py) every k steps; 0 (default) "
+                         "disables them — the fast-path train step is a "
+                         "separate executable and stays byte-identical")
+    ap.add_argument("--divergence-action", default=None,
+                    choices=["warn", "abort"],
+                    help="watch the diagnosed Lyapunov Xi_t: 'warn' logs "
+                         "when it stops contracting, 'abort' exits nonzero "
+                         "(overscaled --consensus-gamma detector); requires "
+                         "--diag-every >= 1")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a TensorBoard-loadable jax.profiler trace "
+                         "of steady-state steps into this directory (also "
+                         "enables in-graph obs: phase scopes)")
+    ap.add_argument("--profile-steps", type=int, default=None,
+                    help="steps to trace under --profile-dir (default 3; "
+                         "the compiling step 0 is always skipped)")
     args = ap.parse_args(argv)
 
     # fail fast on bad combinations, before any jax/device work
@@ -249,9 +297,27 @@ def main(argv=None):
                      f"{args.keep_checkpoints}")
         if not args.checkpoint_dir:
             ap.error("--keep-checkpoints requires --checkpoint-dir")
+    if args.diag_every < 0:
+        ap.error(f"--diag-every must be >= 0 (0 disables diagnostics), got "
+                 f"{args.diag_every}")
+    if args.divergence_action is not None and args.diag_every == 0:
+        ap.error("--divergence-action watches the Lyapunov diagnostics; it "
+                 "requires --diag-every >= 1")
+    if args.profile_steps is not None:
+        if not args.profile_dir:
+            ap.error("--profile-steps only applies with --profile-dir")
+        if args.profile_steps < 1:
+            ap.error(f"--profile-steps must be >= 1, got "
+                     f"{args.profile_steps}")
 
     if args.simulate_devices:
         simulate_host_devices(args.simulate_devices)
+
+    sinks = [StdoutSink(formatter=_stdout_line)]
+    if args.metrics_dir:
+        sinks.append(JsonlSink(os.path.join(args.metrics_dir,
+                                            "metrics.jsonl")))
+    mlog = MetricLog(sinks)
 
     import jax
     import jax.numpy as jnp
@@ -280,10 +346,10 @@ def main(argv=None):
     proc_info = ("" if args.topology_process == "none" else
                  f" process={args.topology_process}")
     proc_info += " pipelined" if args.pipeline_gossip else ""
-    print(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
-          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"nodes={n_nodes} mode={args.mode} topology={args.topology} "
-          f"gossip_steps={args.gossip_steps}{proc_info}")
+    mlog.log(f"[train] arch={cfg.name} params={count_params(cfg)/1e6:.1f}M "
+             f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+             f"nodes={n_nodes} mode={args.mode} topology={args.topology} "
+             f"gossip_steps={args.gossip_steps}{proc_info}")
 
     if args.compressor == "qsgd":
         comp_kwargs = (("s", args.qsgd_s),)
@@ -339,13 +405,13 @@ def main(argv=None):
             rounds = (args.elastic_warmup_rounds
                       if args.elastic_warmup_rounds is not None else warmup)
             if warmup and rounds:
-                print(f"[train] elastic restore: checkpoint "
-                      f"n_nodes={man.n_nodes} "
-                      f"topology={man.fingerprint.get('topology')} -> "
-                      f"n_nodes={n_nodes} topology={args.topology}; x_hat/s "
-                      f"re-zeroed, consensus warmup {rounds} CHOCO-GOSSIP "
-                      f"rounds (re-derived Theorem-2 "
-                      f"gamma={trainer.gamma:.3e})", flush=True)
+                mlog.log(f"[train] elastic restore: checkpoint "
+                         f"n_nodes={man.n_nodes} "
+                         f"topology={man.fingerprint.get('topology')} -> "
+                         f"n_nodes={n_nodes} topology={args.topology}; x_hat/s "
+                         f"re-zeroed, consensus warmup {rounds} CHOCO-GOSSIP "
+                         f"rounds (re-derived Theorem-2 "
+                         f"gamma={trainer.gamma:.3e})")
                 state = trainer.consensus_warmup(state, rounds)
         else:   # legacy flat npz
             state = jax.device_put(
@@ -353,7 +419,7 @@ def main(argv=None):
                 trainer.state_shardings())
             resumed = int(jax.device_get(state.step))
             budget_check(resumed)
-        print(f"[train] resumed from {args.resume} at step {resumed}")
+        mlog.log(f"[train] resumed from {args.resume} at step {resumed}")
     else:
         state = trainer.init_state(jax.random.PRNGKey(0))
 
@@ -361,24 +427,80 @@ def main(argv=None):
     bpn = args.batch_per_node or 4
     next_batch = make_lm_batch_fn(cfg, seq, bpn, n_nodes, args.heterogeneity)
     batch0 = jax.tree.map(jnp.asarray, next_batch())
-    step_fn = trainer.jitted_train_step(jax.eval_shape(lambda: state),
-                                        jax.eval_shape(lambda: batch0))
+    state_shape = jax.eval_shape(lambda: state)
+    # phase scopes change HLO op metadata, so they ride the profiler flag:
+    # the default build keeps the compiled step byte-identical (the
+    # telemetry_off invariant, benchmarks/bench_telemetry.py)
+    step_fn = trainer.jitted_train_step(state_shape,
+                                        jax.eval_shape(lambda: batch0),
+                                        phase_scopes=bool(args.profile_dir))
 
-    t0 = time.time()
+    from repro.obs.metrics import bucket_telemetry
+    buckets = bucket_telemetry(trainer)
+    mlog.header(arch=cfg.name, mode=args.mode, topology=args.topology,
+                fingerprint=trainer.fingerprint(),
+                jax_version=jax.__version__,
+                mesh=dict(zip(mesh.axis_names, mesh.devices.shape)),
+                gamma=buckets["gamma"], buckets=buckets["buckets"],
+                wire_bytes_round=buckets["wire_bytes_round"])
+    diag_fn = (trainer.jitted_diagnostics(state_shape)
+               if args.diag_every else None)
+    monitor = (DivergenceMonitor() if args.divergence_action else None)
+    prof = ProfileSession(args.profile_dir,
+                          n_steps=(args.profile_steps or 3))
+
+    timer = StepTimer()
+    timer.start()
     remaining = args.steps - resumed       # --steps is the TOTAL budget
-    for i in range(remaining):
-        state, mets = step_fn(state, jax.tree.map(jnp.asarray, next_batch()))
-        if i % 10 == 0 or i == remaining - 1:
-            print(f"[train] step {int(state.step):5d} "
-                  f"loss {float(mets['loss']):.4f} "
-                  f"lr {float(mets['lr']):.4f} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
-        if (args.checkpoint_dir and args.checkpoint_every
-                and (i + 1) % args.checkpoint_every == 0):
-            path = os.path.join(args.checkpoint_dir, f"step{int(state.step)}")
-            trainer.save_checkpoint(path, state, metadata={"arch": cfg.name},
-                                    keep_last=args.keep_checkpoints)
-            print(f"[train] checkpointed {path}", flush=True)
+    try:
+        for i in range(remaining):
+            prof.maybe_start(i)
+            state, mets = step_fn(state,
+                                  jax.tree.map(jnp.asarray, next_batch()))
+            if i == 0 or i % 10 == 0 or i == remaining - 1:
+                # honest async-dispatch timing: block only on tap steps;
+                # the first (compiling) step is reported once as
+                # train/compile_s and never averaged into s/step
+                metrics = {"train/loss": float(mets["loss"]),
+                           "train/lr": float(mets["lr"]),
+                           "train/grad_norm": float(mets["grad_norm"])}
+                blocker = lambda: jax.block_until_ready(state)
+                if i == 0:
+                    metrics["train/compile_s"] = timer.mark_compile(blocker)
+                else:
+                    sps = timer.tap(i, blocker)
+                    if sps is not None:
+                        metrics["train/s_per_step"] = sps
+                extra = {k: float(v) for k, v in mets.items()
+                         if k not in ("loss", "lr", "grad_norm")}
+                mlog.emit(int(state.step), metrics, extra=extra or None)
+            if diag_fn is not None and (i + 1) % args.diag_every == 0:
+                diag = {k: float(v) for k, v in diag_fn(state).items()}
+                diag["diag/gamma"] = buckets["gamma"]
+                diag["diag/wire_bytes_round"] = float(
+                    buckets["wire_bytes_round"])
+                mlog.emit(int(state.step), diag)
+                xi = diag.get("diag/lyapunov",
+                              diag["diag/consensus_dist"])
+                msg = monitor.update(int(state.step), xi) if monitor else None
+                if msg is not None:
+                    if args.divergence_action == "abort":
+                        raise SystemExit(f"[train] {msg}")
+                    mlog.log(f"[train] WARNING: {msg}")
+            if (args.checkpoint_dir and args.checkpoint_every
+                    and (i + 1) % args.checkpoint_every == 0):
+                path = os.path.join(args.checkpoint_dir,
+                                    f"step{int(state.step)}")
+                trainer.save_checkpoint(path, state,
+                                        metadata={"arch": cfg.name},
+                                        keep_last=args.keep_checkpoints)
+                mlog.log(f"[train] checkpointed {path}")
+            if prof.active and i + 1 >= prof.stop_after:
+                jax.block_until_ready(state)
+            prof.maybe_stop(i)
+    finally:
+        prof.close()
+        mlog.close()
     return 0
 
 

@@ -1,0 +1,17 @@
+"""Runtime telemetry subsystem: registered-schema metrics, structured
+sinks, async-dispatch-aware timers, profiler hooks, and the in-graph
+Lyapunov/consensus diagnostics.
+
+Layering contract (enforced by ``analysis/source_lint.py``):
+
+* ``schema.py``, ``sinks.py``, ``timers.py``, ``trace.py`` are jax-free at
+  import — the launchers import them before XLA_FLAGS is frozen — and are
+  the only obs modules allowed host-side wall clocks / file I/O;
+* ``metrics.py`` is traced code (it builds the jitted diagnostics
+  function) and is held to the same purity contract as ``comm``/``core``;
+* nothing in ``comm``/``core``/``train`` imports obs — the trainer's
+  ``jitted_diagnostics`` pulls ``obs.metrics`` in lazily, so the fast-path
+  train step's compiled HLO stays byte-identical when telemetry is off
+  (asserted by ``benchmarks/bench_telemetry.py`` + the
+  ``telemetry_off`` invariant row).
+"""

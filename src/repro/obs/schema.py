@@ -1,0 +1,135 @@
+"""The metric registry: every key a sink may carry, with units and
+meaning.
+
+Mirrors the ``FINGERPRINT_EXEMPT`` pattern: the registry is a literal
+data structure, linted statically (``analysis/metrics_lint.py`` parses
+this file's AST) so an emitted-but-unregistered key or a stale registry
+entry is a CI finding, and validated dynamically (:func:`validate_record`)
+so a malformed record dies at the emit site, not in a downstream parser.
+
+Record shape (one JSON object per line in the JSONL sink):
+
+* ``kind="header"`` — one per run: config fingerprint, jax version, mesh,
+  resolved gamma, per-bucket wire/gamma telemetry.  Free-form payload
+  (validated for the reserved keys only).
+* ``kind="metrics"`` — ``step`` plus registered metric keys; unregistered
+  keys are rejected.  Host-only annotations ride in the reserved
+  ``extra`` dict, outside the schema.
+* ``kind="log"`` — a plain ``msg`` string (the stdout sink renders it
+  verbatim, which is how the launchers route their historical prints
+  through the sink without changing the line format).
+
+Module is jax-free at import: the launchers import it pre-XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, NamedTuple, Tuple
+
+#: keys with reserved meaning in every record; never metric names
+RESERVED_KEYS = ("kind", "step", "msg", "extra")
+
+#: metric names are namespaced ``<subsystem>/<snake_case>``
+METRIC_KEY_RE = re.compile(r"^[a-z]+/[a-z0-9_]+$")
+
+
+class MetricSpec(NamedTuple):
+    """One registered metric: wire name, units, one-line meaning."""
+
+    name: str
+    units: str
+    description: str
+
+
+#: The registry.  Kept a pure literal — ``analysis/metrics_lint.py``
+#: parses it from the AST without importing this module.
+METRIC_SPECS: Tuple[MetricSpec, ...] = (
+    # -- training loop (launch/train.py) -----------------------------------
+    MetricSpec("train/loss", "nats",
+               "mean per-node LM loss of the step's batch"),
+    MetricSpec("train/lr", "1", "learning rate at the step"),
+    MetricSpec("train/grad_norm", "1",
+               "global l2 norm of the per-node gradients"),
+    MetricSpec("train/compile_s", "s",
+               "wall time of the first (compiling) train step, reported "
+               "once so the steady-state s/step is not skewed by it"),
+    MetricSpec("train/s_per_step", "s",
+               "post-warmup seconds per train step between taps "
+               "(block_until_ready on tap steps only)"),
+    # -- in-graph Lyapunov / consensus diagnostics (obs/metrics.py) --------
+    MetricSpec("diag/consensus_dist", "1",
+               "consensus distance sum_i ||x_i - xbar||^2 over all "
+               "parameter leaves"),
+    MetricSpec("diag/ef_residual", "1",
+               "error-feedback residual sum_i ||x_i - x_hat_i||^2 "
+               "(replica-averaged under process/staleness engines)"),
+    MetricSpec("diag/lyapunov", "1",
+               "Theorem-2 Lyapunov Xi_t = consensus_dist + ef_residual; "
+               "must contract linearly under the derived gamma"),
+    MetricSpec("diag/compress_err", "1",
+               "measured ||Q(d) - d||^2 / ||d||^2 on the current "
+               "x - x_hat deltas (one compression sample per leaf)"),
+    MetricSpec("diag/compress_err_bound", "1",
+               "Assumption-1 bound 1 - omega the measured compression "
+               "error must stay under (in expectation)"),
+    MetricSpec("diag/psw_spread", "1",
+               "push-sum weight spread max_i w_i / min_i w_i (1.0 at "
+               "perfect mixing; push-sum mode only)"),
+    MetricSpec("diag/gamma", "1",
+               "resolved worst-bucket Theorem-2 consensus stepsize"),
+    MetricSpec("diag/wire_bytes_round", "bytes",
+               "analytic compressed payload bytes one node ships per "
+               "gossip round (all buckets)"),
+    # -- serving latency (launch/serve.py) ---------------------------------
+    MetricSpec("serve/ttft_p50_s", "s",
+               "median time-to-first-token across requests (prefill + "
+               "first decode, blocked on the token)"),
+    MetricSpec("serve/ttft_p99_s", "s",
+               "p99 time-to-first-token across requests"),
+    MetricSpec("serve/tok_p50_s", "s",
+               "median per-token decode latency across generated tokens"),
+    MetricSpec("serve/tok_p99_s", "s",
+               "p99 per-token decode latency across generated tokens"),
+    MetricSpec("serve/throughput_tok_s", "tok/s",
+               "aggregate generated tokens per second over the run"),
+    # -- dry-run compile audit (launch/dryrun.py) --------------------------
+    MetricSpec("dryrun/compile_s", "s",
+               "phase-A compile wall time of one arch x shape combo"),
+    MetricSpec("dryrun/total_s", "s",
+               "total wall time of one arch x shape combo (compile + "
+               "roofline extrapolation)"),
+)
+
+#: name -> spec lookup
+METRICS: Dict[str, MetricSpec] = {m.name: m for m in METRIC_SPECS}
+
+
+def validate_record(record: dict) -> dict:
+    """Validate one record against the registry; returns it unchanged.
+
+    ``header``/``log`` records are free-form (reserved keys checked);
+    ``metrics`` records must carry an integer-like ``step`` and only
+    registered metric keys with scalar values.  Raises ``ValueError`` so a
+    bad emit fails at the call site.
+    """
+    kind = record.get("kind")
+    if kind not in ("header", "metrics", "log"):
+        raise ValueError(f"record kind must be header|metrics|log, got "
+                         f"{kind!r}")
+    if kind != "metrics":
+        return record
+    step = record.get("step")
+    if not isinstance(step, int) or isinstance(step, bool):
+        raise ValueError(f"metrics record needs an int step, got {step!r}")
+    for key, value in record.items():
+        if key in RESERVED_KEYS:
+            continue
+        if key not in METRICS:
+            raise ValueError(
+                f"unregistered metric key {key!r}: add a MetricSpec "
+                f"(name, units, description) to obs/schema.py — the "
+                f"metrics lint enforces the registry statically too")
+        if not isinstance(value, (int, float)) or isinstance(value, bool):
+            raise ValueError(f"metric {key!r} must be a scalar number, "
+                             f"got {type(value).__name__}")
+    return record

@@ -1,0 +1,94 @@
+"""Async-dispatch-aware step timing.
+
+A jitted train-step call returns as soon as the work is *dispatched* —
+wrapping it in ``time.perf_counter()`` measures Python overhead, not the
+step.  Honest timing therefore needs a device barrier, but blocking every
+step would serialize the dispatch pipeline the engines are built to keep
+full.  :class:`StepTimer` resolves the tension the way profilers do: the
+caller blocks **only on tap steps** (every k-th report line), and the
+timer amortizes the wall time over the steps dispatched since the last
+tap.  The first (compiling) step is marked separately so the reported
+steady-state s/step is never skewed by compile time — the bug this class
+replaced in ``launch/train.py`` averaged compile into every line of the
+run.
+
+Host-side by design (wall clocks are its whole job): on the traced-purity
+exemption list, jax-free at import.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+
+class StepTimer:
+    """Compile-aware tap timer for an async-dispatched step loop.
+
+    Protocol::
+
+        timer = StepTimer()
+        timer.start()
+        for i in range(steps):
+            state = step_fn(state, batch)          # async dispatch
+            if i == 0:
+                compile_s = timer.mark_compile(blocker)   # block once
+            elif tap_step(i):
+                s_per_step = timer.tap(i, blocker)        # block on taps
+
+    ``blocker`` is any callable that synchronizes the device (e.g.
+    ``lambda: jax.block_until_ready(state)``); injecting it keeps this
+    module jax-free.  ``tap`` returns the post-warmup seconds/step since
+    the previous tap (compile excluded by construction), or ``None``
+    before any post-compile step has completed.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self._clock = clock
+        self._mark: Optional[float] = None
+        self._mark_step = 0
+        self.compile_s: Optional[float] = None
+
+    def start(self) -> None:
+        """Start the run clock (call immediately before the first step)."""
+        self._mark = self._clock()
+        self._mark_step = 0
+
+    def mark_compile(self, blocker: Callable[[], None]) -> float:
+        """Block after the first step; records and returns its wall time
+        (compile + one execute) and re-bases the tap clock so steady-state
+        taps never include it."""
+        if self._mark is None:
+            raise ValueError("start() must precede mark_compile()")
+        blocker()
+        now = self._clock()
+        self.compile_s = now - self._mark
+        self._mark, self._mark_step = now, 1
+        return self.compile_s
+
+    def tap(self, step_index: int, blocker: Callable[[], None]
+            ) -> Optional[float]:
+        """Block, then return mean seconds/step over the steps dispatched
+        since the last tap (or since compile).  ``step_index`` counts
+        completed steps, 0-based like the loop variable."""
+        if self._mark is None:
+            raise ValueError("start() must precede tap()")
+        done = step_index + 1
+        if done <= self._mark_step:
+            return None
+        blocker()
+        now = self._clock()
+        per_step = (now - self._mark) / (done - self._mark_step)
+        self._mark, self._mark_step = now, done
+        return per_step
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]) without numpy — the serve
+    launcher computes p50/p99 latencies pre-jax."""
+    if not values:
+        raise ValueError("percentile of an empty sequence")
+    if not 0.0 <= p <= 100.0:
+        raise ValueError(f"percentile p must be in [0, 100], got {p}")
+    ordered: List[float] = sorted(float(v) for v in values)
+    rank = max(1, -(-int(p * len(ordered)) // 100))  # ceil(p*n/100), >= 1
+    return ordered[rank - 1]

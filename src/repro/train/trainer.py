@@ -9,6 +9,7 @@ One train step =
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import Any, Callable, NamedTuple, Optional, Tuple
@@ -230,16 +231,16 @@ class DecentralizedTrainer:
         else:
             self.gamma = 1.0
 
-    def _worst_omega(self) -> float:
-        """Assumption-1 omega for the stepsize: computed from the ACTUAL
-        packed bucket sizes (the packed engine compresses per bucket, so the
-        contraction is governed by the worst bucket), not a fixed
-        representative dimension.  Legacy per-leaf engine keeps the old
-        1M-coordinate representative value."""
-        if not self.choco.packed_gossip:
-            return self.compressor.omega(1 << 20)
+    def _bucket_spec(self):
+        """The packed engine's BucketSpec, derived exactly as the exchange
+        derives it (local shard shapes under the param PartitionSpecs);
+        None for the legacy per-leaf engine.  Shared by the omega/gamma
+        derivation below and the telemetry run header
+        (``obs/metrics.py::bucket_telemetry``)."""
+        if not self.choco.packed_gossip or self.compressor is None:
+            return None
         from repro.comm.gossip import _leaf_routes, _pack_align
-        from repro.comm.packing import bucket_omega_worst, make_bucket_spec
+        from repro.comm.packing import make_bucket_spec
         shape = self.state_shape()
         specs = param_pspecs(shape.params, self.model.cfg,
                              node_axis=self.gossip_axis,
@@ -253,12 +254,22 @@ class DecentralizedTrainer:
         local = [jax.ShapeDtypeStruct(
                      _local_shape(l.shape, sp, dict(self.mesh.shape)), l.dtype)
                  for l, sp in zip(jax.tree.leaves(hat_shape), spec_leaves)]
-        spec = make_bucket_spec(
+        return make_bucket_spec(
             local, align=_pack_align(self.compressor, self.choco.pack_align),
             exact_small_leaves=self.choco.exact_small_leaves,
             small_leaf_threshold=self.choco.small_leaf_threshold,
             routes=_leaf_routes(specs, self.gossip_axis))
-        return bucket_omega_worst(spec, self.compressor)
+
+    def _worst_omega(self) -> float:
+        """Assumption-1 omega for the stepsize: computed from the ACTUAL
+        packed bucket sizes (the packed engine compresses per bucket, so the
+        contraction is governed by the worst bucket), not a fixed
+        representative dimension.  Legacy per-leaf engine keeps the old
+        1M-coordinate representative value."""
+        if not self.choco.packed_gossip:
+            return self.compressor.omega(1 << 20)
+        from repro.comm.packing import bucket_omega_worst
+        return bucket_omega_worst(self._bucket_spec(), self.compressor)
 
     # -- state ----------------------------------------------------------------
 
@@ -500,10 +511,15 @@ class DecentralizedTrainer:
 
     # -- step -----------------------------------------------------------------
 
-    def make_train_step(self):
+    def make_train_step(self, phase_scopes: bool = False):
         model, opt, lr_fn = self.model, self.optimizer, self.lr_fn
         pushsum = self.mode == "pushsum"
         pipelined = self.choco.pipeline_gossip and self.mode == "choco"
+        # jax.named_scope lands in HLO op metadata, so phase names are
+        # opt-in (--profile-dir): the default build keeps the compiled step
+        # byte-identical to the pre-telemetry HLO (telemetry_off invariant)
+        scope = (jax.named_scope if phase_scopes
+                 else (lambda name: contextlib.nullcontext()))
 
         def pipelined_step(state: TrainState, batch) -> Tuple[TrainState, dict]:
             # Two-phase carry (comm/pipelined.py).  Phase A traces the
@@ -516,16 +532,21 @@ class DecentralizedTrainer:
             # backward matmuls (benchmarks/bench_overlap.py audits this).
             gkey = jax.random.fold_in(state.key, state.step)
             exchange = self._exchange(state.params)
-            gx, new_hat, new_s = exchange(gkey, state.params,
-                                          state.x_hat, state.s)
+            with scope("obs:exchange"):
+                gx, new_hat, new_s = exchange(gkey, state.params,
+                                              state.x_hat, state.s)
 
             def loss_fn(p, b):
                 loss, metrics = model.loss(p, b)
                 return loss, metrics
-            (losses, metrics), grads = jax.vmap(
-                jax.value_and_grad(loss_fn, has_aux=True))(state.params, batch)
+            with scope("obs:grad"):
+                (losses, metrics), grads = jax.vmap(
+                    jax.value_and_grad(loss_fn, has_aux=True))(state.params,
+                                                               batch)
             lr = lr_fn(state.step)
-            x_half, new_opt = opt.update(state.params, grads, state.opt, lr)
+            with scope("obs:optimizer"):
+                x_half, new_opt = opt.update(state.params, grads,
+                                             state.opt, lr)
 
             # merge the independent halves elementwise:
             #   x_{k+1} = x_k - lr g + gamma (s_k - x_hat_k)
@@ -559,23 +580,27 @@ class DecentralizedTrainer:
                 z = debias(state.params, state.psw)
             else:
                 z = state.params
-            (losses, metrics), grads = jax.vmap(
-                jax.value_and_grad(loss_fn, has_aux=True))(z, batch)
+            with scope("obs:grad"):
+                (losses, metrics), grads = jax.vmap(
+                    jax.value_and_grad(loss_fn, has_aux=True))(z, batch)
 
             # 2. local optimizer half-step  x^{t+1/2}
             lr = lr_fn(state.step)
-            x_half, new_opt = opt.update(state.params, grads, state.opt, lr)
+            with scope("obs:optimizer"):
+                x_half, new_opt = opt.update(state.params, grads,
+                                             state.opt, lr)
 
             # 3. gossip exchange (CHOCO / plain / all-reduce / push-sum)
             gkey = jax.random.fold_in(state.key, state.step)
             exchange = self._exchange(state.params)   # specs from leaf ndims
-            if pushsum:
-                new_params, new_hat, new_s, new_w = exchange(
-                    gkey, x_half, state.x_hat, state.s, state.psw)
-            else:
-                new_params, new_hat, new_s = exchange(gkey, x_half,
-                                                      state.x_hat, state.s)
-                new_w = state.psw
+            with scope("obs:exchange"):
+                if pushsum:
+                    new_params, new_hat, new_s, new_w = exchange(
+                        gkey, x_half, state.x_hat, state.s, state.psw)
+                else:
+                    new_params, new_hat, new_s = exchange(
+                        gkey, x_half, state.x_hat, state.s)
+                    new_w = state.psw
 
             out = TrainState(params=new_params, x_hat=new_hat, s=new_s,
                              opt=new_opt, step=state.step + 1, key=state.key,
@@ -611,18 +636,26 @@ class DecentralizedTrainer:
 
     # -- jit with shardings -----------------------------------------------------
 
-    def jitted_train_step(self, state_shape, batch_shape):
+    def jitted_train_step(self, state_shape, batch_shape,
+                          phase_scopes: bool = False):
         state_specs = self.state_pspecs(state_shape)
         bspecs = batch_pspecs(batch_shape, node_axis=self.gossip_axis,
                               dp_axis=self.fsdp_axis)
         shard = lambda tree: jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), tree,
             is_leaf=lambda x: isinstance(x, P))
-        step = self.make_train_step()
+        step = self.make_train_step(phase_scopes=phase_scopes)
         return jax.jit(step,
                        in_shardings=(shard(state_specs), shard(bspecs)),
                        out_shardings=(shard(state_specs), None),
                        donate_argnums=(0,))
+
+    def jitted_diagnostics(self, state_shape):
+        """Jitted Lyapunov/consensus diagnostics (``obs/metrics.py``) — a
+        SEPARATE executable from the train step; the lazy import keeps
+        ``obs`` entirely out of the telemetry-off import path."""
+        from repro.obs import metrics as obs_metrics
+        return obs_metrics.jitted_diagnostics(self, state_shape)
 
 
 def _global_shape_error(shape, sp, axes, dim, extent):

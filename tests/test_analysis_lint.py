@@ -1,16 +1,18 @@
 """CI gate for ``python -m repro.analysis.lint`` (fast tier).
 
 Two directions:
-  * the LIVE repo is clean — all three passes (source, fingerprint,
-    invariants) report zero findings, and the CLI exits 0.  This is the
-    gate that keeps every repo contract (jax-free-at-import, traced
-    purity, fail-fast ordering, docstring coverage, fingerprint coverage,
-    benchmark-record conformance) enforced from here on;
+  * the LIVE repo is clean — all four passes (source, fingerprint,
+    metrics, invariants) report zero findings, and the CLI exits 0.
+    This is the gate that keeps every repo contract (jax-free-at-import,
+    traced purity, fail-fast ordering, docstring coverage, fingerprint
+    coverage, metric-registry coverage, benchmark-record conformance)
+    enforced from here on;
   * each pass actually FIRES — scratch fixture trees with forced
     violations (module-scope ``import jax`` in a gated file, a
-    wall-clock call in a traced package, an un-fingerprinted ChocoConfig
-    field, a doctored benchmark record) must produce a non-zero exit
-    with a pointed finding.
+    wall-clock call or ``open()`` in a traced package, an
+    un-fingerprinted ChocoConfig field, an unregistered emitted metric
+    key, a doctored benchmark record) must produce a non-zero exit with
+    a pointed finding.
 """
 import os
 import subprocess
@@ -229,6 +231,114 @@ def test_doctored_bench_record_fires_via_cli(tmp_path):
     r = _run_cli("--root", str(tmp_path), "--only", "invariants")
     assert r.returncode == 1, r.stdout + r.stderr
     assert "permute_launches = 17" in r.stdout
+
+
+def test_file_io_in_traced_package_fires(tmp_path):
+    root = _write(tmp_path, "src/repro/core/evil_io.py", '''\
+        """Traced module doing file I/O inside a round function."""
+
+
+        def round_fn(x):
+            """Bad round function: reads a file mid-trace."""
+            with open("gamma.txt") as f:
+                return x * float(f.read())
+        ''')
+    findings = lint_traced_purity(root)
+    assert len(findings) == 1, [f.render() for f in findings]
+    assert "open()" in findings[0].message
+    assert "obs/sinks.py" in findings[0].message   # points at the fix
+
+
+def test_host_side_obs_modules_are_purity_exempt(tmp_path):
+    # sinks.py owns the run-log file and the wall clock by design
+    root = _write(tmp_path, "src/repro/obs/sinks.py", '''\
+        """Host-side sink: clocks and file I/O are its job."""
+        import time
+
+
+        def append(path, line):
+            """Append a line, stamped."""
+            with open(path, "a") as f:
+                f.write(f"{time.time()} {line}")
+        ''')
+    assert lint_traced_purity(root) == []
+    # ...but the in-graph diagnostics module gets no such pass
+    root2 = _write(tmp_path / "t2", "src/repro/obs/metrics.py", '''\
+        """In-graph diagnostics illegally touching the filesystem."""
+
+
+        def diagnostics(state):
+            """Bad diagnostics."""
+            with open("xi.txt") as f:
+                return float(f.read())
+        ''')
+    assert len(lint_traced_purity(root2)) == 1
+
+
+def test_unregistered_and_stale_metric_keys_fire_via_cli(tmp_path):
+    root = _write(tmp_path, "src/repro/obs/schema.py", '''\
+        """Scratch registry: one live metric, one stale."""
+        METRIC_SPECS = (
+            MetricSpec("train/loss", "nats", "mean LM loss"),
+            MetricSpec("train/ghost", "1", "registered but never emitted"),
+        )
+        ''')
+    _write(tmp_path, "src/repro/launch/emit.py", '''\
+        """Scratch emitter with one registered and one unregistered key."""
+
+
+        def report(mlog, step, loss, wobble):
+            """Emit a step record."""
+            mlog.emit(step, {"train/loss": loss, "train/wobble": wobble})
+        ''')
+    r = _run_cli("--root", root, "--only", "metrics")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "'train/wobble' is not registered" in r.stdout
+    assert "src/repro/launch/emit.py:6" in r.stdout
+    assert "stale registry entry 'train/ghost'" in r.stdout
+    assert "src/repro/obs/schema.py:4" in r.stdout
+    # path-ish strings outside the registered namespaces never fire
+    root2 = _write(tmp_path / "t2", "src/repro/obs/schema.py", '''\
+        """Scratch registry."""
+        METRIC_SPECS = (
+            MetricSpec("train/loss", "nats", "mean LM loss"),
+        )
+        ''')
+    _write(tmp_path / "t2", "src/repro/launch/ok.py", '''\
+        """Emitter whose config-path string must not count as a metric."""
+
+
+        def report(mlog, step, loss):
+            """Emit a step record."""
+            mlog.emit(step, {"train/loss": loss}, extra={"cfg": "launch/env"})
+        ''')
+    r2 = _run_cli("--root", str(tmp_path / "t2"), "--only", "metrics")
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+
+
+def test_malformed_registry_literal_fires(tmp_path):
+    from repro.analysis.metrics_lint import run_metrics_lint
+    root = _write(tmp_path, "src/repro/obs/schema.py", '''\
+        """Registry with a computed entry and a duplicate."""
+        METRIC_SPECS = (
+            MetricSpec("train/loss", "nats", "mean LM loss"),
+            MetricSpec("train/loss", "nats", "duplicate"),
+            MetricSpec("BadName", "1", "violates the key regex"),
+            MetricSpec("train/" + kind, "1", "non-literal name"),
+        )
+        ''')
+    _write(tmp_path, "src/repro/launch/emit.py", '''\
+        """Keeps train/loss emitted."""
+
+
+        def report(mlog, step, loss):
+            """Emit."""
+            mlog.emit(step, {"train/loss": loss})
+        ''')
+    msgs = [f.message for f in run_metrics_lint(root)]
+    assert any("duplicate metric name" in m for m in msgs), msgs
+    assert any("does not match" in m for m in msgs), msgs
+    assert any("string literals" in m for m in msgs), msgs
 
 
 def test_fingerprint_exemption_contradiction_and_staleness(tmp_path):

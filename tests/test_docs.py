@@ -119,3 +119,25 @@ def test_readme_documents_every_cli_choice():
                        "packed", "per-leaf"))
         if c != "none" and f"`{c}`" not in text]
     assert not undocumented, f"CLI choices missing from README: {undocumented}"
+
+
+def test_readme_documents_telemetry_flags():
+    """The telemetry surface (observability PR) stays documented: every
+    run-log / diagnostics / profiler flag appears backticked in the README
+    CLI matrix, and the architecture doc carries the Observability
+    section the table links to."""
+    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as f:
+        readme = f.read()
+    missing = [flag for flag in
+               ("--metrics-dir", "--diag-every", "--divergence-action",
+                "--profile-dir", "--profile-steps", "--requests")
+               if f"`{flag}" not in readme]
+    assert not missing, f"telemetry flags missing from README: {missing}"
+    with open(os.path.join(ROOT, "docs", "ARCHITECTURE.md"),
+              encoding="utf-8") as f:
+        arch = f.read()
+    assert "## Observability" in arch
+    for anchor in ("obs/schema.py", "obs/metrics.py", "obs/sinks.py",
+                   "telemetry_off", "telemetry_diag"):
+        assert anchor in arch, f"ARCHITECTURE.md Observability must " \
+                               f"mention {anchor}"
