@@ -8,7 +8,7 @@ def main() -> None:
     from . import bench_consensus, bench_topology, bench_sgd, \
         bench_collectives, bench_kernels, bench_checkpoint, \
         bench_stochastic, bench_async, bench_overlap, bench_fused, \
-        bench_telemetry
+        bench_telemetry, bench_scenarios
     bench_consensus.run()      # paper Figs 2-3
     bench_topology.run()       # paper Fig 4 + schedule compiler + k-step gossip
     bench_sgd.run()            # paper Figs 5-6
@@ -20,6 +20,7 @@ def main() -> None:
     bench_overlap.run()        # pipelined-gossip overlap audit (Perf H)
     bench_fused.run()          # fused-kernel HBM stream audit (Perf I)
     bench_telemetry.run()      # telemetry cost audit (observability)
+    bench_scenarios.run()      # non-IID scenario suite + straggler audit
 
 
 if __name__ == '__main__':

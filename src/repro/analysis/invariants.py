@@ -89,6 +89,13 @@ ENGINE_INVARIANTS: Tuple[EngineInvariant, ...] = (
                     "permute launches added over the linkfail baseline",
         expect=(("permute_launches", "baseline"),)),
     EngineInvariant(
+        engine="choco_staleness_stragglers", backend="jnp",
+        description="per-edge straggler staleness: heterogeneous delay "
+                    "tables change WHICH ring slot each edge reads, never "
+                    "how much is shipped — zero permute launches added "
+                    "over the global-staleness baseline",
+        expect=(("permute_launches", "baseline"),)),
+    EngineInvariant(
         engine="choco_matching", backend="jnp",
         description="matching engine: one sampled round per step via "
                     "lax.switch — the entry computation carries zero "
@@ -275,6 +282,24 @@ def _bench_telemetry_findings(root: str) -> List[Finding]:
     return findings
 
 
+def _bench_scenarios_findings(root: str) -> List[Finding]:
+    path = os.path.join(root, "BENCH_scenarios.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        rec = json.load(f)
+    findings = []
+    straggler = rec.get("straggler", {})
+    ctx = dict(CONTEXT_VARS)
+    ctx["baseline"] = straggler.get("global_staleness", 0)
+    for v in check_invariant(
+            get_invariant("choco_staleness_stragglers", "jnp"),
+            {"permute_launches": straggler.get("straggler_staleness", -1)},
+            ctx):
+        findings.append(Finding("invariants", "BENCH_scenarios.json", 0, v))
+    return findings
+
+
 def lint_bench_invariants(root: str) -> List[Finding]:
     """The invariant lint pass: the registry is well-formed and the
     committed benchmark records (BENCH_overlap.json / BENCH_fused.json /
@@ -283,4 +308,5 @@ def lint_bench_invariants(root: str) -> List[Finding]:
     count, a non-zero gated-matmul count for the pipelined engine, or a
     telemetry record claiming HLO parity it doesn't have — is a finding."""
     return (_registry_findings() + _bench_overlap_findings(root)
-            + _bench_fused_findings(root) + _bench_telemetry_findings(root))
+            + _bench_fused_findings(root) + _bench_telemetry_findings(root)
+            + _bench_scenarios_findings(root))

@@ -62,13 +62,22 @@ Three properties fall out of this construction:
     :meth:`StalenessProcess.expected_matrix`).
 
 Theorem-2 stepsize under staleness: gamma is re-derived from the
-*delay-averaged* mixing matrix ``E_eff = phi W + (1 - phi) I`` with
-``phi = E[1/(1+d)]`` (a fixed-delay-d exchange advances consensus at ~1/(1+d)
-the fresh rate), mirroring ``LinkFailureProcess``'s ``E[W] = (1-p) W + p I``;
-and the staleness bound folds into omega as ``omega / (1 + tau)`` (up to
-tau+1 compressed increments can be outstanding per edge, inflating the
-accumulated-compression-error term exactly where omega enters the Lyapunov
-recursion) — :meth:`StalenessProcess.effective_omega`.
+*delay-averaged* mixing matrix — per edge, ``E_eff`` delivers the edge
+weight at its freshness rate ``phi_e = E[1/(1+d_e)]`` and folds the
+remainder into the diagonal (with one global delay distribution this is
+exactly ``phi W + (1 - phi) I``, mirroring ``LinkFailureProcess``'s
+``E[W] = (1-p) W + p I``); and the delay distribution folds into omega as
+the distribution-aware ``omega * phi`` (minimum per-edge phi_e when
+straggler edges give links their own distributions; the point mass at tau
+recovers the historical worst-case ``omega / (1 + tau)``) —
+:meth:`StalenessProcess.effective_omega`.
+
+Per-edge heterogeneity: ``straggler_edges`` / ``straggler_delay_probs``
+give named physical links their own delay distribution (default point mass
+at tau — a maximally slow link), so one straggler is expressible without
+slowing the whole mesh; the engines and the matrix simulator pick this up
+automatically because delays enter both ONLY through
+:meth:`StalenessProcess.edge_delays`' per-edge cumulative table.
 
 State cost: the engine keeps (1 + tau) own trees (public copy + ring) and
 R * (1 + tau) source trees (replica + ring per round) — the per-round
@@ -105,12 +114,35 @@ class StalenessProcess(TopologyProcess):
 
     ``max_staleness = 0`` forces every edge fresh and reduces the engine to
     the static Algorithm-2 replica form (the link-failure engine at p = 0).
+
+    Per-edge heterogeneity (stragglers): ``straggler_edges`` names physical
+    links (canonical ``(min, max)`` node pairs from the schedule's edge
+    support) whose delays are drawn from ``straggler_delay_probs`` instead
+    of the global ``delay_probs`` — so a single slow link / straggler node
+    is expressible without slowing the whole mesh.  ``straggler_delay_probs``
+    defaults to the point mass at ``max_staleness`` (a maximally slow link);
+    naming an edge outside the schedule's support raises ``ValueError``.
     """
     schedule: GossipSchedule
     max_staleness: int = 1
     delay_probs: Optional[Tuple[float, ...]] = None
+    straggler_edges: Optional[Tuple[Tuple[int, int], ...]] = None
+    straggler_delay_probs: Optional[Tuple[float, ...]] = None
 
     kind = "staleness"
+
+    def _normalize_probs(self, probs, what: str) -> Tuple[float, ...]:
+        """Validate and normalize a delay distribution over {0..tau}."""
+        tau = self.max_staleness
+        arr = np.asarray(probs, dtype=np.float64)
+        if arr.shape != (tau + 1,):
+            raise ValueError(
+                f"{what} needs max_staleness + 1 = {tau + 1} "
+                f"entries (P(d=0..{tau})), got shape {arr.shape}")
+        if arr.min() < 0 or arr.sum() <= 0:
+            raise ValueError(f"{what} must be nonnegative with "
+                             f"positive mass, got {tuple(arr)}")
+        return tuple(float(p) for p in arr / arr.sum())
 
     def __post_init__(self):
         tau = self.max_staleness
@@ -120,25 +152,44 @@ class StalenessProcess(TopologyProcess):
             raise ValueError("staleness process needs a schedule with at "
                              "least one round (n >= 2)")
         if self.delay_probs is None:
-            probs = np.full(tau + 1, 1.0 / (tau + 1))
+            probs = tuple(1.0 / (tau + 1) for _ in range(tau + 1))
         else:
-            probs = np.asarray(self.delay_probs, dtype=np.float64)
-            if probs.shape != (tau + 1,):
-                raise ValueError(
-                    f"delay_probs needs max_staleness + 1 = {tau + 1} "
-                    f"entries (P(d=0..{tau})), got shape {probs.shape}")
-            if probs.min() < 0 or probs.sum() <= 0:
-                raise ValueError(f"delay_probs must be nonnegative with "
-                                 f"positive mass, got {tuple(probs)}")
-            probs = probs / probs.sum()
-        object.__setattr__(self, "delay_probs",
-                           tuple(float(p) for p in probs))
+            probs = self._normalize_probs(self.delay_probs, "delay_probs")
+        object.__setattr__(self, "delay_probs", probs)
         edges, round_edge_ids, round_recv = _index_schedule_edges(
             self.schedule)
         object.__setattr__(self, "n_edges", len(edges))
         object.__setattr__(self, "_edges", edges)
         object.__setattr__(self, "round_edge_ids", round_edge_ids)
         object.__setattr__(self, "round_recv", round_recv)
+        # per-edge delay distributions: global row everywhere, straggler
+        # rows overridden (point mass at tau unless given explicitly)
+        if self.straggler_delay_probs is not None \
+                and self.straggler_edges is None:
+            raise ValueError("straggler_delay_probs given without "
+                             "straggler_edges")
+        table = np.tile(np.asarray(probs), (max(len(edges), 1), 1))
+        if self.straggler_edges is not None:
+            if self.straggler_delay_probs is None:
+                sprobs = tuple(0.0 for _ in range(tau)) + (1.0,)
+            else:
+                sprobs = self._normalize_probs(self.straggler_delay_probs,
+                                               "straggler_delay_probs")
+            object.__setattr__(self, "straggler_delay_probs", sprobs)
+            canon = []
+            edge_pos = {e: k for k, e in enumerate(edges)}
+            for a, b in self.straggler_edges:
+                e = (min(int(a), int(b)), max(int(a), int(b)))
+                if e not in edge_pos:
+                    raise ValueError(
+                        f"unknown straggler edge {a}-{b}: the schedule's "
+                        f"edge support is {list(edges)}")
+                canon.append(e)
+                table[edge_pos[e]] = np.asarray(sprobs)
+            object.__setattr__(self, "straggler_edges", tuple(canon))
+        object.__setattr__(self, "edge_delay_probs",
+                           tuple(tuple(float(p) for p in row)
+                                 for row in table))
         # per-round source node per destination (self when not receiving):
         # the simulator reads replicas as rows src_r of the global state
         n = self.schedule.n
@@ -163,21 +214,34 @@ class StalenessProcess(TopologyProcess):
         delay-d exchange advances consensus at ~1/(1+d) the fresh rate, so
         phi is the expected fraction of a fresh exchange each edge delivers
         per step.  phi = 1 at tau = 0; a dropped link is the phi -> 0
-        (d -> infinity) limit, recovering the LinkFailure model."""
+        (d -> infinity) limit, recovering the LinkFailure model.  This is
+        the GLOBAL distribution's phi; straggler edges carry their own
+        (see :attr:`edge_freshness`)."""
         return float(sum(p / (1.0 + k)
                          for k, p in enumerate(self.delay_probs)))
+
+    @property
+    def edge_freshness(self) -> Tuple[float, ...]:
+        """Per-edge phi_e = E[1/(1+d_e)] under each edge's own delay
+        distribution — equals ``(freshness,) * n_edges`` when no straggler
+        edges are configured."""
+        return tuple(float(sum(p / (1.0 + k) for k, p in enumerate(row)))
+                     for row in self.edge_delay_probs)
 
     # -- sampling (the shared-seed determinism contract) --------------------
 
     def edge_delays(self, key: jax.Array, t: int) -> jax.Array:
         """(n_edges,) int32 delays for gossip round t — identical on every
         node (pure function of the shared exchange key).  Inverse-CDF over
-        the static cumulative delay_probs, same lowering rationale as
-        ``MatchingProcess.round_index`` (searchsorted-free)."""
+        each edge's static cumulative delay distribution, same lowering
+        rationale as ``MatchingProcess.round_index`` (searchsorted-free).
+        Without straggler edges every row of the cumulative table is the
+        global distribution, so the draw is bit-identical to the historical
+        single-distribution sampler (same uniforms, same thresholds)."""
         k = self._sample_key(key, t)
         u = jax.random.uniform(k, (max(self.n_edges, 1),))
-        cum = np.cumsum(np.asarray(self.delay_probs))[:-1]
-        return jnp.sum(u[:, None] >= jnp.asarray(cum, jnp.float32)[None, :],
+        cum = np.cumsum(np.asarray(self.edge_delay_probs), axis=1)[:, :-1]
+        return jnp.sum(u[:, None] >= jnp.asarray(cum, jnp.float32),
                        axis=1).astype(jnp.int32)
 
     def round_delays(self, delays: jax.Array):
@@ -206,25 +270,41 @@ class StalenessProcess(TopologyProcess):
             "expected_matrix() for the delay-averaged theory surrogate.")
 
     def expected_matrix(self) -> np.ndarray:
-        """Delay-averaged effective mixing matrix
-        ``E_eff = phi W + (1 - phi) I`` with phi = E[1/(1+d)]: each edge
-        delivers its weight at the freshness-discounted rate, the remainder
-        folds into the diagonal.  Same shape as the link-failure
-        ``E[W] = (1-p) W + p I`` — a drop is the d -> infinity (phi -> 0)
-        staleness limit — and what ``expected_delta_beta`` hands the
-        Theorem-2 stepsize."""
-        W = np.asarray(self.schedule.mixing_matrix())
-        phi = self.freshness
-        return phi * W + (1.0 - phi) * np.eye(self.n)
+        """Delay-averaged effective mixing matrix, built PER EDGE: each
+        edge delivers its off-diagonal weight at its own
+        freshness-discounted rate phi_e = E[1/(1+d_e)], the undelivered
+        remainder ``(1 - phi_e) w`` folds into the destination's diagonal.
+        With a single global delay distribution every phi_e = phi and this
+        collapses to the historical ``phi W + (1 - phi) I`` exactly (rows
+        of W sum to 1, so the folded remainders complete the diagonal).
+        Same shape as the link-failure ``E[W] = (1-p) W + p I`` — a drop is
+        the d -> infinity (phi -> 0) staleness limit — and what
+        ``expected_delta_beta`` hands the Theorem-2 stepsize."""
+        from repro.comm.schedule import round_recv_vec
+        phis = self.edge_freshness
+        E = np.diag(np.asarray(self.schedule.self_weights,
+                               dtype=np.float64))
+        for r, rnd in enumerate(self.schedule.rounds):
+            recv = round_recv_vec(rnd, self.n)
+            for src, dst in rnd.perm:
+                e = self.round_edge_ids[r][dst]
+                phi = phis[e] if e >= 0 else 1.0
+                E[dst, src] += phi * recv[dst]
+                E[dst, dst] += (1.0 - phi) * recv[dst]
+        return E
 
     def effective_omega(self, omega: float) -> float:
-        """Fold the staleness bound into the compression quality: up to
-        tau + 1 compressed increments can be outstanding on an edge before
-        the consumer reads them, so the worst-case accumulated compression
-        error — the term omega controls in the Theorem-2 Lyapunov
-        recursion — grows by that factor.  omega_eff = omega / (1 + tau)
-        (exact at tau = 0)."""
-        return omega / (1.0 + self.max_staleness)
+        """Fold the delay distribution into the compression quality: a
+        delay-d edge reads a snapshot missing the last d compressed
+        increments, inflating the accumulated-compression-error term —
+        exactly where omega enters the Theorem-2 Lyapunov recursion — by
+        the same 1/(1+d) freshness factor that discounts the mixing.  The
+        distribution-aware constant is ``omega_eff = omega * phi`` with
+        phi = E[1/(1+d)] (the point mass at d = tau recovers the historical
+        worst-case ``omega / (1 + tau)``; exact at tau = 0 where phi = 1).
+        With straggler edges the SLOWEST edge governs the worst
+        accumulated-error path, so the minimum per-edge phi_e is used."""
+        return omega * min(self.edge_freshness)
 
 
 # ---------------------------------------------------------------------------

@@ -335,7 +335,9 @@ def make_topology_process(kind: str, schedule: GossipSchedule, *,
                           matching_sampler: str = "uniform",
                           edge_drop_prob: float = 0.1,
                           max_staleness: int = 1,
-                          delay_probs=None) -> TopologyProcess:
+                          delay_probs=None,
+                          straggler_edges=None,
+                          straggler_delay_probs=None) -> TopologyProcess:
     """Named-process registry mirrored by the ``--topology-process`` CLI."""
     if kind == "matching":
         return MatchingProcess(schedule, sampler=matching_sampler)
@@ -344,7 +346,9 @@ def make_topology_process(kind: str, schedule: GossipSchedule, *,
     if kind == "staleness":
         from repro.comm.async_gossip import StalenessProcess
         return StalenessProcess(schedule, max_staleness=max_staleness,
-                                delay_probs=delay_probs)
+                                delay_probs=delay_probs,
+                                straggler_edges=straggler_edges,
+                                straggler_delay_probs=straggler_delay_probs)
     raise ValueError(f"unknown topology process {kind!r}; "
                      f"have ('matching', 'linkfail', 'staleness')")
 

@@ -185,6 +185,54 @@ def parse_topology(spec: str) -> Tuple[str, ...]:
     return tuple(t.strip() for t in spec.split(",") if t.strip())
 
 
+def parse_straggler_edges(spec: str) -> Tuple[Tuple[int, int], ...]:
+    """Comma-separated edge spec -> node-pair tuple ("0-1,2-3" ->
+    ((0, 1), (2, 3))).  Syntax-level validation only (integers, 'a-b'
+    shape, no self-edges, nonnegative ids) so the CLI can fail fast
+    pre-jax; membership in the compiled schedule's edge support is
+    checked by ``StalenessProcess`` once the schedule exists.  This
+    module is jax-free, so launcher and trainer share one parser."""
+    out = []
+    for part in (p.strip() for p in spec.split(",") if p.strip()):
+        halves = part.split("-")
+        if len(halves) != 2:
+            raise ValueError(f"straggler edge {part!r} is not of the "
+                             f"form 'a-b'")
+        try:
+            a, b = int(halves[0]), int(halves[1])
+        except ValueError:
+            raise ValueError(f"straggler edge {part!r} has non-integer "
+                             f"node ids") from None
+        if a < 0 or b < 0:
+            raise ValueError(f"straggler edge {part!r} has negative "
+                             f"node ids")
+        if a == b:
+            raise ValueError(f"straggler edge {part!r} is a self-edge")
+        out.append((min(a, b), max(a, b)))
+    if not out:
+        raise ValueError(f"empty straggler edge spec {spec!r}")
+    return tuple(out)
+
+
+def parse_delay_probs(spec: str) -> Tuple[float, ...]:
+    """Comma-separated probability list ("0.1,0.2,0.7" -> floats).
+    Syntax + sign/mass validation only; the arity-vs-max_staleness check
+    lives with the consumer (CLI pre-jax, ``StalenessProcess`` at build
+    time).  Jax-free, shared by launcher and trainer."""
+    try:
+        probs = tuple(float(p.strip())
+                      for p in spec.split(",") if p.strip())
+    except ValueError:
+        raise ValueError(f"delay probs {spec!r} must be a comma-"
+                         f"separated float list") from None
+    if not probs:
+        raise ValueError(f"empty delay-probs spec {spec!r}")
+    if min(probs) < 0 or sum(probs) <= 0:
+        raise ValueError(f"delay probs must be nonnegative with positive "
+                         f"mass, got {probs}")
+    return probs
+
+
 @dataclasses.dataclass(frozen=True)
 class ChocoConfig:
     """Paper-technique settings for decentralized training."""
@@ -247,6 +295,16 @@ class ChocoConfig:
     # checkpoint fingerprint: flipping it changes neither the state layout
     # nor the wire bytes, so resumes are backend-portable.
     kernel_backend: str = "auto"
+    # non-IID data skew (data/partition.py): Dirichlet(alpha) per-node
+    # vocab/label shards — alpha -> inf is IID ("shuffled"), alpha -> 0 is
+    # disjoint shards ("sorted").  None = the legacy heterogeneity knob.
+    data_skew_alpha: Optional[float] = None
+    # per-edge straggler links for topology_process="staleness": canonical
+    # "a-b,c-d" edge list whose delays come from straggler_delay_probs
+    # (comma-separated P(d=0..tau); None = point mass at tau, a maximally
+    # slow link) instead of the global uniform/delay_probs distribution.
+    straggler_edges: Optional[str] = None
+    straggler_delay_probs: Optional[str] = None
 
     def comp_dict(self):
         return dict(self.comp_kwargs)

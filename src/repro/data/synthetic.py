@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.data.partition import (dirichlet_class_shares, dirichlet_shards,
+                                  mean_tv_distance)
 
 
 # ---------------------------------------------------------------------------
@@ -31,6 +33,12 @@ class TokenStream:
     `heterogeneity`: 0.0 = iid across nodes (randomly shuffled);
     1.0 = fully sorted (each node samples a disjoint vocabulary slice) —
     the paper's `sorted` setting where decentralized averaging matters most.
+
+    `skew_alpha`: when set, per-node vocabulary ownership is drawn from a
+    seeded Dirichlet(alpha) over the vocab (``data/partition.py``) instead
+    of the hard `heterogeneity` slice mask — alpha -> inf recovers the IID
+    Zipf stream, alpha -> 0 recovers near-disjoint `sorted`-style slices.
+    Takes precedence over `heterogeneity` when both are given.
     """
     vocab_size: int
     seq_len: int
@@ -38,31 +46,64 @@ class TokenStream:
     n_nodes: int
     heterogeneity: float = 0.0
     seed: int = 0
+    skew_alpha: Optional[float] = None
+
+    def node_probs(self) -> np.ndarray:
+        """Per-node token sampling distributions, ``(n_nodes, vocab_size)``.
+
+        Deterministic in the dataclass fields alone (the Dirichlet draw
+        uses its own ``default_rng(seed)`` stream, independent of the
+        token-sampling stream), so telemetry and tests can recompute the
+        exact distributions the iterator samples from.
+        """
+        V = self.vocab_size
+        base_p = 1.0 / np.arange(1, V + 1)
+        probs = np.tile(base_p, (self.n_nodes, 1))
+        if self.skew_alpha is not None:
+            shares = dirichlet_class_shares(
+                V, self.n_nodes, self.skew_alpha,
+                np.random.default_rng(self.seed))
+            probs = probs * (shares.T * self.n_nodes)
+        elif self.heterogeneity > 0:
+            h = self.heterogeneity
+            slice_size = V // self.n_nodes
+            for i in range(self.n_nodes):
+                mask = np.zeros(V)
+                lo = i * slice_size
+                # last node absorbs the V % n_nodes remainder so the
+                # union of slices always covers the whole vocabulary
+                hi = (i + 1) * slice_size if i < self.n_nodes - 1 else V
+                mask[lo:hi] = 1.0
+                probs[i] = base_p * ((1 - h) + h * V * mask)
+        return probs / probs.sum(axis=1, keepdims=True)
+
+    def skew_tv(self) -> float:
+        """Mean TV distance of per-node token distributions from their
+        average — the host-side source of ``diag/data_skew_tv``."""
+        return mean_tv_distance(self.node_probs())
 
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         rng = np.random.default_rng(self.seed)
+        probs = self.node_probs()
         V = self.vocab_size
-        ranks = np.arange(1, V + 1)
-        base_p = 1.0 / ranks
-        slice_size = V // self.n_nodes
         while True:
             toks = np.empty((self.n_nodes, self.batch_per_node, self.seq_len + 1),
                             np.int32)
             for i in range(self.n_nodes):
-                p = base_p.copy()
-                if self.heterogeneity > 0:
-                    mask = np.zeros(V)
-                    mask[i * slice_size:(i + 1) * slice_size] = 1.0
-                    p = p * ((1 - self.heterogeneity) + self.heterogeneity * V * mask)
-                p = p / p.sum()
                 toks[i] = rng.choice(V, size=(self.batch_per_node, self.seq_len + 1),
-                                     p=p).astype(np.int32)
+                                     p=probs[i]).astype(np.int32)
             yield {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
 
 
 def make_lm_batch_fn(cfg: ModelConfig, seq_len: int, batch_per_node: int,
-                     n_nodes: int, heterogeneity: float = 0.0, seed: int = 0):
-    """Returns next_batch() -> pytree of np arrays matching train_batch_specs."""
+                     n_nodes: int, heterogeneity: float = 0.0, seed: int = 0,
+                     skew_alpha: Optional[float] = None):
+    """Returns next_batch() -> pytree of np arrays matching train_batch_specs.
+
+    The returned callable carries a ``skew_tv`` attribute — the mean TV
+    divergence of the per-node sampling distributions (0.0 for the audio
+    family, whose synthetic frames are IID by construction).
+    """
     if cfg.family == "audio":
         rng = np.random.default_rng(seed)
         fe = cfg.frontend
@@ -75,14 +116,16 @@ def make_lm_batch_fn(cfg: ModelConfig, seq_len: int, batch_per_node: int,
                                (n_nodes, batch_per_node, S)).astype(np.int32)
             mask = (rng.random((n_nodes, batch_per_node, S)) < 0.08).astype(np.float32)
             return {"frame_embeds": emb, "targets": tgt, "mask": mask}
+        next_batch.skew_tv = 0.0
         return next_batch
 
     if cfg.family == "vlm":
         rng = np.random.default_rng(seed)
         fe = cfg.frontend
         text = seq_len - fe.n_tokens
-        stream = iter(TokenStream(cfg.vocab_size, text - 1, batch_per_node,
-                                  n_nodes, heterogeneity, seed))
+        ts = TokenStream(cfg.vocab_size, text - 1, batch_per_node,
+                         n_nodes, heterogeneity, seed, skew_alpha)
+        stream = iter(ts)
 
         def next_batch():
             b = next(stream)
@@ -91,11 +134,17 @@ def make_lm_batch_fn(cfg: ModelConfig, seq_len: int, batch_per_node: int,
             return {"patch_embeds": emb,
                     "tokens": np.concatenate([b["tokens"], b["labels"][..., -1:]], -1),
                     "labels": np.concatenate([b["labels"], b["labels"][..., -1:]], -1)}
+        next_batch.skew_tv = ts.skew_tv()
         return next_batch
 
-    stream = iter(TokenStream(cfg.vocab_size, seq_len, batch_per_node,
-                              n_nodes, heterogeneity, seed))
-    return lambda: next(stream)
+    ts = TokenStream(cfg.vocab_size, seq_len, batch_per_node,
+                     n_nodes, heterogeneity, seed, skew_alpha)
+    stream = iter(ts)
+
+    def next_batch():
+        return next(stream)
+    next_batch.skew_tv = ts.skew_tv()
+    return next_batch
 
 
 # ---------------------------------------------------------------------------
@@ -137,10 +186,16 @@ class LogRegProblem:
 
 def make_logreg(name: str, n_nodes: int, *, sorted_assignment: bool = False,
                 seed: int = 0, m: Optional[int] = None,
-                d: Optional[int] = None) -> LogRegProblem:
+                d: Optional[int] = None,
+                skew_alpha: Optional[float] = None) -> LogRegProblem:
     """Synthetic stand-ins matched to the paper's dataset statistics:
     epsilon: m=400k (reduced default 8k), d=2000, dense.
     rcv1:    m=20242 (reduced default 8k), d=47236 (reduced 4724), 0.15% dense.
+
+    ``skew_alpha`` replaces the binary sorted/shuffled assignment with a
+    Dirichlet(alpha) shard over the binary labels (``data/partition.py``):
+    alpha -> inf recovers the shuffled (IID) split, alpha -> 0 the sorted
+    (label-disjoint) split.  Mutually exclusive with ``sorted_assignment``.
     """
     rng = np.random.default_rng(seed)
     if name == "epsilon":
@@ -164,7 +219,14 @@ def make_logreg(name: str, n_nodes: int, *, sorted_assignment: bool = False,
     b = np.where(logits > 0, 1.0, -1.0).astype(np.float32)
 
     m_per = m // n_nodes
-    order = np.argsort(b) if sorted_assignment else rng.permutation(m)
-    node_index = order[: m_per * n_nodes].reshape(n_nodes, m_per)
+    if skew_alpha is not None:
+        if sorted_assignment:
+            raise ValueError("skew_alpha and sorted_assignment are "
+                             "mutually exclusive")
+        node_index = dirichlet_shards(b.astype(np.int64), n_nodes,
+                                      skew_alpha, seed=seed)
+    else:
+        order = np.argsort(b) if sorted_assignment else rng.permutation(m)
+        node_index = order[: m_per * n_nodes].reshape(n_nodes, m_per)
     return LogRegProblem(A=jnp.asarray(A), b=jnp.asarray(b),
                          node_index=jnp.asarray(node_index), reg=1.0 / m)

@@ -24,7 +24,8 @@ import os
 import sys
 
 # jax-free imports: safe before XLA_FLAGS is frozen by the first jax import
-from repro.configs.base import parse_topology
+from repro.configs.base import (parse_delay_probs, parse_straggler_edges,
+                                parse_topology)
 from repro.launch.env import simulate_host_devices
 from repro.obs.sinks import (DivergenceMonitor, JsonlSink, MetricLog,
                              StdoutSink)
@@ -105,6 +106,17 @@ def main(argv=None):
                          "staleness: per-edge payload delays are sampled "
                          "uniformly from {0..tau} (default 1; tau=0 is the "
                          "always-fresh replica engine)")
+    ap.add_argument("--straggler-edges", default=None,
+                    help="comma-separated slow links ('0-1,2-3') whose "
+                         "delays come from --straggler-delay-probs instead "
+                         "of the global distribution (requires "
+                         "--topology-process staleness; edge ids are node "
+                         "pairs in the gossip graph's edge support)")
+    ap.add_argument("--straggler-delay-probs", default=None,
+                    help="comma-separated P(d=0..tau) for the straggler "
+                         "edges ('0.1,0.2,0.7'; needs --max-staleness + 1 "
+                         "entries); default: point mass at tau — a "
+                         "maximally slow link")
     ap.add_argument("--pipeline-gossip", action="store_true",
                     help="pipelined CHOCO engine (comm/pipelined.py): "
                          "compress the pre-gradient iterate and integrate "
@@ -140,6 +152,11 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="momentum")
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--heterogeneity", type=float, default=1.0)
+    ap.add_argument("--data-skew-alpha", type=float, default=None,
+                    help="Dirichlet(alpha) non-IID vocab shards "
+                         "(data/partition.py): alpha -> inf is IID "
+                         "('shuffled'), alpha -> 0 disjoint shards "
+                         "('sorted'); overrides --heterogeneity")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--keep-checkpoints", type=int, default=None,
@@ -251,6 +268,30 @@ def main(argv=None):
         if args.max_staleness < 0:
             ap.error(f"--max-staleness must be >= 0, got "
                      f"{args.max_staleness}")
+    if args.straggler_delay_probs is not None and args.straggler_edges is None:
+        ap.error("--straggler-delay-probs names the straggler links' delay "
+                 "distribution; it requires --straggler-edges")
+    if args.straggler_edges is not None:
+        if args.topology_process != "staleness":
+            ap.error("--straggler-edges models per-edge DELAYS; it requires "
+                     "--topology-process staleness")
+        try:
+            parse_straggler_edges(args.straggler_edges)
+        except ValueError as e:
+            ap.error(f"--straggler-edges: {e}")
+        if args.straggler_delay_probs is not None:
+            try:
+                probs = parse_delay_probs(args.straggler_delay_probs)
+            except ValueError as e:
+                ap.error(f"--straggler-delay-probs: {e}")
+            tau = args.max_staleness if args.max_staleness is not None else 1
+            if len(probs) != tau + 1:
+                ap.error(f"--straggler-delay-probs needs max_staleness + 1 "
+                         f"= {tau + 1} entries (P(d=0..{tau})), got "
+                         f"{len(probs)}")
+    if args.data_skew_alpha is not None and not args.data_skew_alpha > 0:
+        ap.error(f"--data-skew-alpha must be > 0 (Dirichlet concentration), "
+                 f"got {args.data_skew_alpha}")
     if args.pipeline_gossip:
         if args.mode != "choco":
             ap.error(f"--pipeline-gossip hides the COMPRESSED exchange "
@@ -375,7 +416,10 @@ def main(argv=None):
                                          if args.max_staleness is not None
                                          else 1),
                           pipeline_gossip=args.pipeline_gossip,
-                          kernel_backend=args.kernel_backend),
+                          kernel_backend=args.kernel_backend,
+                          data_skew_alpha=args.data_skew_alpha,
+                          straggler_edges=args.straggler_edges,
+                          straggler_delay_probs=args.straggler_delay_probs),
         mesh=mesh, n_nodes=n_nodes,
         optimizer=make_optimizer(args.optimizer),
         lr_fn=cosine_schedule(args.lr, warmup=min(100, args.steps // 10 + 1),
@@ -425,7 +469,8 @@ def main(argv=None):
 
     seq = args.seq_len or min(cfg.n_layers * 64, 512)
     bpn = args.batch_per_node or 4
-    next_batch = make_lm_batch_fn(cfg, seq, bpn, n_nodes, args.heterogeneity)
+    next_batch = make_lm_batch_fn(cfg, seq, bpn, n_nodes, args.heterogeneity,
+                                  skew_alpha=args.data_skew_alpha)
     batch0 = jax.tree.map(jnp.asarray, next_batch())
     state_shape = jax.eval_shape(lambda: state)
     # phase scopes change HLO op metadata, so they ride the profiler flag:
@@ -463,7 +508,9 @@ def main(argv=None):
                 # train/compile_s and never averaged into s/step
                 metrics = {"train/loss": float(mets["loss"]),
                            "train/lr": float(mets["lr"]),
-                           "train/grad_norm": float(mets["grad_norm"])}
+                           "train/grad_norm": float(mets["grad_norm"]),
+                           "diag/node_loss_spread":
+                               float(mets["node_loss_spread"])}
                 blocker = lambda: jax.block_until_ready(state)
                 if i == 0:
                     metrics["train/compile_s"] = timer.mark_compile(blocker)
@@ -472,13 +519,15 @@ def main(argv=None):
                     if sps is not None:
                         metrics["train/s_per_step"] = sps
                 extra = {k: float(v) for k, v in mets.items()
-                         if k not in ("loss", "lr", "grad_norm")}
+                         if k not in ("loss", "lr", "grad_norm",
+                                      "node_loss_spread")}
                 mlog.emit(int(state.step), metrics, extra=extra or None)
             if diag_fn is not None and (i + 1) % args.diag_every == 0:
                 diag = {k: float(v) for k, v in diag_fn(state).items()}
                 diag["diag/gamma"] = buckets["gamma"]
                 diag["diag/wire_bytes_round"] = float(
                     buckets["wire_bytes_round"])
+                diag["diag/data_skew_tv"] = float(next_batch.skew_tv)
                 mlog.emit(int(state.step), diag)
                 xi = diag.get("diag/lyapunov",
                               diag["diag/consensus_dist"])

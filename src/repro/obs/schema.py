@@ -80,6 +80,15 @@ METRIC_SPECS: Tuple[MetricSpec, ...] = (
     MetricSpec("diag/wire_bytes_round", "bytes",
                "analytic compressed payload bytes one node ships per "
                "gossip round (all buckets)"),
+    MetricSpec("diag/node_loss_spread", "1",
+               "max_i loss_i - min_i loss_i across the per-node training "
+               "losses this step — divergence under data skew made "
+               "observable"),
+    MetricSpec("diag/data_skew_tv", "1",
+               "mean total-variation distance of the per-node sampling "
+               "distributions from their average (0 = IID; constant per "
+               "run, from the data pipeline's Dirichlet/heterogeneity "
+               "settings)"),
     # -- serving latency (launch/serve.py) ---------------------------------
     MetricSpec("serve/ttft_p50_s", "s",
                "median time-to-first-token across requests (prefill + "

@@ -44,6 +44,11 @@ FINGERPRINT_EXEMPT = {
                        "update but changes no state layout, bucket spec, "
                        "or wire format — resuming under a different gamma "
                        "is a hyperparameter change, not a shape change",
+    "data_skew_alpha": "data-pipeline knob: the Dirichlet shard shapes "
+                       "which samples each node draws but touches no "
+                       "state layout, mixing matrix, gamma, or wire "
+                       "format — resuming under a different skew is a "
+                       "data change, like swapping the input stream",
 }
 
 
@@ -158,12 +163,37 @@ class DecentralizedTrainer:
                     f"increments — the plain engine ships fresh iterates "
                     f"with no increment stream to ring-buffer")
             from repro.comm.stochastic import make_topology_process
+            stragglers = sprobs = None
+            if (self.choco.straggler_edges is not None
+                    or self.choco.straggler_delay_probs is not None):
+                if self.choco.topology_process != "staleness":
+                    raise ValueError(
+                        f"straggler edges model per-edge DELAYS — they "
+                        f"require topology_process='staleness', got "
+                        f"{self.choco.topology_process!r}")
+                if self.choco.straggler_edges is None:
+                    raise ValueError("straggler_delay_probs given without "
+                                     "straggler_edges")
+                from repro.configs.base import (parse_delay_probs,
+                                                parse_straggler_edges)
+                stragglers = parse_straggler_edges(
+                    self.choco.straggler_edges)
+                if self.choco.straggler_delay_probs is not None:
+                    sprobs = parse_delay_probs(
+                        self.choco.straggler_delay_probs)
             self.process = make_topology_process(
                 self.choco.topology_process, self.schedules[0],
                 matching_sampler=self.choco.matching_sampler,
                 edge_drop_prob=self.choco.edge_drop_prob,
-                max_staleness=self.choco.max_staleness)
+                max_staleness=self.choco.max_staleness,
+                straggler_edges=stragglers,
+                straggler_delay_probs=sprobs)
         else:
+            if (self.choco.straggler_edges is not None
+                    or self.choco.straggler_delay_probs is not None):
+                raise ValueError(
+                    "straggler edges model per-edge DELAYS — they require "
+                    "topology_process='staleness', got no topology process")
             self.process = None
         # pipelined engine (comm/pipelined.py): the exchange is issued on
         # the PRE-gradient iterate and its payload lands in the NEXT step's
@@ -379,6 +409,12 @@ class DecentralizedTrainer:
             "edge_drop_prob": self.choco.edge_drop_prob,
             "matching_sampler": self.choco.matching_sampler,
             "max_staleness": self._effective_staleness(),
+            # per-edge delay heterogeneity changes the expected mixing
+            # matrix (and hence the Theorem-2 gamma the EF state was built
+            # under), same hazard class as edge_drop_prob; recorded so a
+            # straggler change is visible in the manifest
+            "straggler_edges": self.choco.straggler_edges,
+            "straggler_delay_probs": self.choco.straggler_delay_probs,
         }
 
     def _effective_staleness(self) -> int:
@@ -557,7 +593,10 @@ class DecentralizedTrainer:
                              opt=new_opt, step=state.step + 1, key=state.key,
                              psw=state.psw)
             mets = {"loss": jnp.mean(losses), "lr": lr,
-                    "grad_norm": _global_norm(grads)}
+                    "grad_norm": _global_norm(grads),
+                    # per-node loss dispersion: the first-order symptom of
+                    # non-IID shards (diag/node_loss_spread in the run log)
+                    "node_loss_spread": (jnp.max(losses) - jnp.min(losses))}
             for k, v in metrics.items():
                 mets[k] = jnp.mean(v)
             return out, mets
@@ -606,7 +645,10 @@ class DecentralizedTrainer:
                              opt=new_opt, step=state.step + 1, key=state.key,
                              psw=new_w)
             mets = {"loss": jnp.mean(losses), "lr": lr,
-                    "grad_norm": _global_norm(grads)}
+                    "grad_norm": _global_norm(grads),
+                    # per-node loss dispersion: the first-order symptom of
+                    # non-IID shards (diag/node_loss_spread in the run log)
+                    "node_loss_spread": (jnp.max(losses) - jnp.min(losses))}
             for k, v in metrics.items():
                 mets[k] = jnp.mean(v)
             return out, mets

@@ -74,6 +74,116 @@ class TestStalenessProcess:
 
 
 # ---------------------------------------------------------------------------
+# per-edge straggler links
+# ---------------------------------------------------------------------------
+
+class TestStragglerEdges:
+    def test_unknown_edge_rejected(self):
+        """Naming an edge outside the schedule's support is a ValueError
+        (ring(8) has no chord 0-5)."""
+        with pytest.raises(ValueError, match="unknown straggler edge 0-5"):
+            _proc(straggler_edges=((0, 5),))
+
+    def test_registry_passthrough(self):
+        p = make_topology_process(
+            "staleness", _sched("ring"), max_staleness=2,
+            straggler_edges=((1, 0),),
+            straggler_delay_probs=(0.0, 0.5, 0.5))
+        # edge canonicalized to (min, max)
+        assert p.straggler_edges == ((0, 1),)
+        assert p.straggler_delay_probs == (0.0, 0.5, 0.5)
+
+    def test_default_straggler_is_point_mass_at_tau(self):
+        p = _proc(tau=2, straggler_edges=((0, 1),))
+        assert p.straggler_delay_probs == (0.0, 0.0, 1.0)
+        e = p._edges.index((0, 1))
+        assert p.edge_freshness[e] == pytest.approx(1.0 / 3)
+
+    def test_probs_without_edges_rejected(self):
+        with pytest.raises(ValueError, match="without"):
+            _proc(tau=1, straggler_delay_probs=(0.5, 0.5))
+
+    def test_nonstraggler_draws_bit_identical_to_global(self):
+        """The per-edge cumulative table shares one uniform draw per edge,
+        so adding a straggler edge must not perturb any OTHER edge's delay
+        sequence (and the straggler itself obeys its point mass)."""
+        base = _proc("torus", tau=2)
+        strag = _proc("torus", tau=2, straggler_edges=((0, 1),))
+        e = strag._edges.index((0, 1))
+        key = jax.random.PRNGKey(11)
+        for t in range(6):
+            d0 = np.asarray(base.edge_delays(key, t))
+            d1 = np.asarray(strag.edge_delays(key, t))
+            other = np.arange(len(d0)) != e
+            np.testing.assert_array_equal(d0[other], d1[other])
+            assert d1[e] == 2
+
+    def test_expected_matrix_per_edge_algebra(self):
+        """Straggler edges carry their own phi_e: the expected matrix keeps
+        phi * w on every healthy edge, phi_s * w on the straggler, and
+        stays symmetric row-stochastic (the undelivered remainder folds
+        into BOTH endpoints' diagonals equally)."""
+        topo = make_topology("ring", 8)
+        p = StalenessProcess(compile_schedule(topo), max_staleness=2,
+                             straggler_edges=((2, 3),))
+        E = p.expected_matrix()
+        phi = p.freshness
+        phi_s = 1.0 / 3                      # point mass at tau = 2
+        W = topo.W
+        np.testing.assert_allclose(E.sum(axis=1), np.ones(8), atol=1e-12)
+        np.testing.assert_allclose(E, E.T, atol=1e-12)
+        assert E[2, 3] == pytest.approx(phi_s * W[2, 3])
+        assert E[0, 1] == pytest.approx(phi * W[0, 1])
+        # straggler slows consensus: eigengap strictly below the uniform one
+        delta_s, _ = p.expected_delta_beta()
+        delta_u, _ = _proc(tau=2).expected_delta_beta()
+        assert delta_s < delta_u
+
+    def test_straggler_average_preserved_in_simulator(self):
+        """Both directions of the straggler link share its delay, so the
+        pairwise-cancellation argument still holds: 1^T x is invariant
+        under the extended simulator, step by step."""
+        p = _proc("ring", tau=2, straggler_edges=((0, 1), (4, 5)),
+                  straggler_delay_probs=(0.1, 0.1, 0.8))
+        x0 = jnp.asarray(np.random.default_rng(0).standard_normal((8, 6)),
+                         jnp.float32)
+        state = init_stale_state(x0, p.max_staleness)
+        key = jax.random.PRNGKey(3)
+        for t in range(12):
+            state = choco_stale_round(state, p, 0.4, TopK(k=2),
+                                      jax.random.fold_in(key, t))
+            np.testing.assert_allclose(np.asarray(state.x.mean(axis=0)),
+                                       np.asarray(x0.mean(axis=0)),
+                                       atol=1e-5)
+
+    @pytest.mark.parametrize("stragglers", [None, ((0, 1),)])
+    def test_theorem2_contraction_band_holds(self, stragglers):
+        """Theorem-2 band under the distribution-aware constants: with
+        gamma = theorem2_stepsize(delta_eff, beta_eff, omega_eff) the stale
+        simulator's consensus error stays inside
+        e_T <= e_0 * rate^T, rate = theorem2_rate(delta_eff, omega_eff) —
+        with and without a straggler edge (the straggler's smaller
+        delta/omega widen the band; the iterates must still respect it)."""
+        from repro.core.choco_gossip import theorem2_rate, theorem2_stepsize
+        p = _proc("hypercube", tau=2, straggler_edges=stragglers)
+        comp = TopK(k=3)
+        omega = p.effective_omega(comp.omega(6))
+        delta, beta = p.expected_delta_beta()
+        gamma = theorem2_stepsize(delta, beta, omega)
+        rate = theorem2_rate(delta, omega)
+        x0 = jnp.asarray(np.random.default_rng(1).standard_normal((8, 6)),
+                         jnp.float32)
+        _, errs = run_choco_stale_gossip(x0, p, gamma, comp, steps=300,
+                                         key=jax.random.PRNGKey(5))
+        errs = np.asarray(errs)
+        bound = float(errs[0]) * rate ** np.arange(len(errs))
+        assert (errs <= bound * 1.05).all(), (
+            f"consensus error left the Theorem-2 band: "
+            f"worst ratio {float((errs / bound).max())}")
+        assert errs[-1] < errs[0]
+
+
+# ---------------------------------------------------------------------------
 # expected-mixing algebra (the Theorem-2 surrogate)
 # ---------------------------------------------------------------------------
 
@@ -109,8 +219,40 @@ class TestExpectedMixing:
         np.testing.assert_allclose(delayed.expected_matrix(),
                                    lf.expected_matrix(), atol=1e-12)
 
-    def test_effective_omega_folds_bound(self):
-        assert _proc(tau=3).effective_omega(0.4) == pytest.approx(0.1)
+    def test_effective_omega_is_distribution_aware(self):
+        """omega_eff = omega * phi with phi = E[1/(1+d)]: the uniform
+        tau=3 distribution keeps more of omega than the worst case, and a
+        point mass at tau reproduces the historical omega / (1 + tau)."""
+        phi = (1 + 1 / 2 + 1 / 3 + 1 / 4) / 4
+        assert _proc(tau=3).effective_omega(0.4) == pytest.approx(0.4 * phi)
+        point = StalenessProcess(_sched("ring"), max_staleness=3,
+                                 delay_probs=(0.0, 0.0, 0.0, 1.0))
+        assert point.effective_omega(0.4) == pytest.approx(0.4 / 4)
+
+    def test_effective_omega_monotone_in_delay_mass(self):
+        """Shifting probability mass toward larger delays can only shrink
+        the Lyapunov constant: omega_eff is monotone decreasing as the
+        delay distribution moves mass from d=0 to d=tau."""
+        sched = _sched("ring")
+        omegas = []
+        for mass in (0.0, 0.25, 0.5, 0.75, 1.0):
+            p = StalenessProcess(sched, max_staleness=2,
+                                 delay_probs=(1.0 - mass, 0.0, mass))
+            omegas.append(p.effective_omega(0.4))
+        assert omegas == sorted(omegas, reverse=True)
+        assert omegas[0] == pytest.approx(0.4)          # all-fresh
+        assert omegas[-1] == pytest.approx(0.4 / 3)     # all at tau=2
+
+    def test_straggler_edge_governs_effective_omega(self):
+        """The slowest edge's phi_e bounds the accumulated-error path, so
+        one straggler edge drags omega_eff to ITS freshness even when the
+        global distribution is all-fresh."""
+        sched = _sched("ring")
+        p = StalenessProcess(sched, max_staleness=2,
+                             delay_probs=(1.0, 0.0, 0.0),
+                             straggler_edges=((0, 1),))
+        assert p.freshness == pytest.approx(1.0)
+        assert p.effective_omega(0.4) == pytest.approx(0.4 / 3)
 
     def test_sample_matrix_not_a_per_step_matrix(self):
         with pytest.raises(NotImplementedError, match="choco_stale_round"):

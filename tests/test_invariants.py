@@ -121,6 +121,20 @@ def test_doctored_pallas_launch_count_is_flagged(tmp_path):
     assert "expected 2 * buckets * steps = 4" in findings[0].message
 
 
+def test_doctored_straggler_parity_is_flagged(tmp_path):
+    rec = {"straggler": {"global_staleness": 8, "straggler_staleness": 12}}
+    (tmp_path / "BENCH_scenarios.json").write_text(json.dumps(rec))
+    findings = lint_bench_invariants(str(tmp_path))
+    assert len(findings) == 1
+    assert findings[0].path == "BENCH_scenarios.json"
+    assert "permute_launches = 12" in findings[0].message
+    assert "expected baseline = 8" in findings[0].message
+    # the committed-record shape passes
+    rec["straggler"]["straggler_staleness"] = 8
+    (tmp_path / "BENCH_scenarios.json").write_text(json.dumps(rec))
+    assert lint_bench_invariants(str(tmp_path)) == []
+
+
 def test_clean_scratch_records_pass(tmp_path):
     overlap = {"serial": {"permute_launches": 8, "dots_total": 12,
                           "dots_feeding_collective": 12},

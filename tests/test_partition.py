@@ -1,0 +1,194 @@
+"""Property suite for the Dirichlet partitioner (data/partition.py) plus
+the TokenStream skew wiring and the vocab-slice remainder regression."""
+import numpy as np
+import pytest
+
+from optional_hypothesis import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.data.partition import (data_skew_tv, dirichlet_class_shares,
+                                  dirichlet_shards, mean_tv_distance,
+                                  node_label_distributions)
+from repro.data.synthetic import TokenStream, make_logreg
+
+
+def _labels(rng, m, n_classes):
+    return rng.integers(0, n_classes, size=m).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# dirichlet_shards: conservation, disjointness, reproducibility
+# ---------------------------------------------------------------------------
+
+
+class TestShardInvariants:
+    @pytest.mark.parametrize("alpha", [0.05, 0.5, 1.0, 10.0, 1e4,
+                                       float("inf")])
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_counts_conserved_and_disjoint(self, alpha, seed):
+        """Every node gets exactly m // n samples; no sample appears on two
+        nodes — for every (alpha, seed)."""
+        rng = np.random.default_rng(seed)
+        labels = _labels(rng, 1000, 10)
+        shards = dirichlet_shards(labels, 8, alpha, seed=seed)
+        assert shards.shape == (8, 125)
+        flat = shards.ravel()
+        assert len(np.unique(flat)) == flat.size            # disjoint
+        assert flat.min() >= 0 and flat.max() < 1000
+
+    def test_bit_reproducible_from_seed(self):
+        rng = np.random.default_rng(3)
+        labels = _labels(rng, 640, 5)
+        a = dirichlet_shards(labels, 8, 0.3, seed=11)
+        b = dirichlet_shards(labels, 8, 0.3, seed=11)
+        np.testing.assert_array_equal(a, b)
+        c = dirichlet_shards(labels, 8, 0.3, seed=12)
+        assert not np.array_equal(a, c)
+
+    def test_alpha_inf_near_uniform(self):
+        """alpha -> inf recovers the IID split: per-node label TV ~ 0."""
+        rng = np.random.default_rng(0)
+        labels = _labels(rng, 8000, 10)
+        shards = dirichlet_shards(labels, 8, float("inf"), seed=0)
+        tv = data_skew_tv(labels, shards)
+        assert tv < 0.08, tv
+
+    def test_alpha_small_near_disjoint(self):
+        """alpha -> 0 recovers the sorted split: each node's shard is
+        dominated by very few labels (high TV from the mean)."""
+        rng = np.random.default_rng(0)
+        labels = _labels(rng, 8000, 10)
+        shards = dirichlet_shards(labels, 8, 1e-3, seed=0)
+        tv = data_skew_tv(labels, shards)
+        assert tv > 0.5, tv
+        # skew is monotone-ish across the sweep endpoints
+        assert tv > data_skew_tv(
+            labels, dirichlet_shards(labels, 8, 100.0, seed=0))
+
+    def test_alpha_nonpositive_rejected(self):
+        labels = np.zeros(64, dtype=np.int64)
+        with pytest.raises(ValueError, match="> 0"):
+            dirichlet_shards(labels, 4, 0.0)
+        with pytest.raises(ValueError, match="> 0"):
+            dirichlet_shards(labels, 4, -1.5)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis missing")
+    @settings(max_examples=25, deadline=None)
+    @given(alpha=st.floats(min_value=0.01, max_value=1e4),
+           seed=st.integers(min_value=0, max_value=2**31 - 1),
+           n_nodes=st.sampled_from([2, 4, 8]),
+           n_classes=st.integers(min_value=2, max_value=12))
+    def test_property_conserved_disjoint_reproducible(self, alpha, seed,
+                                                      n_nodes, n_classes):
+        """Hypothesis sweep of the three structural invariants over the
+        whole (alpha, seed, n, C) space — including non-divisible m."""
+        rng = np.random.default_rng(seed % 1000)
+        m = 991                                              # prime: m % n != 0
+        labels = _labels(rng, m, n_classes)
+        shards = dirichlet_shards(labels, n_nodes, alpha, seed=seed)
+        m_per = m // n_nodes
+        assert shards.shape == (n_nodes, m_per)
+        flat = shards.ravel()
+        assert len(np.unique(flat)) == flat.size
+        np.testing.assert_array_equal(
+            shards, dirichlet_shards(labels, n_nodes, alpha, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# shares / divergence helpers
+# ---------------------------------------------------------------------------
+
+
+class TestSharesAndDivergence:
+    def test_shares_rows_normalized(self):
+        rng = np.random.default_rng(0)
+        s = dirichlet_class_shares(10, 8, 0.2, rng)
+        assert s.shape == (10, 8)
+        np.testing.assert_allclose(s.sum(axis=1), 1.0, atol=1e-9)
+        assert (s >= 0).all()
+
+    def test_shares_inf_is_exactly_uniform(self):
+        rng = np.random.default_rng(0)
+        s = dirichlet_class_shares(6, 4, float("inf"), rng)
+        np.testing.assert_array_equal(s, np.full((6, 4), 0.25))
+
+    def test_mean_tv_bounds(self):
+        uniform = np.full((4, 10), 0.1)
+        assert mean_tv_distance(uniform) == 0.0
+        disjoint = np.eye(4)
+        assert mean_tv_distance(disjoint) == pytest.approx(0.75)
+
+    def test_node_label_distributions(self):
+        labels = np.array([0, 0, 1, 1, 2, 2], dtype=np.int64)
+        idx = np.array([[0, 1, 2], [3, 4, 5]])
+        p = node_label_distributions(labels, idx)
+        np.testing.assert_allclose(p[0], [2 / 3, 1 / 3, 0.0])
+        np.testing.assert_allclose(p[1], [0.0, 1 / 3, 2 / 3])
+
+
+# ---------------------------------------------------------------------------
+# TokenStream wiring + the vocab-slice remainder regression
+# ---------------------------------------------------------------------------
+
+
+class TestTokenStreamSkew:
+    def test_remainder_slice_covers_full_vocab(self):
+        """Regression: at heterogeneity=1.0 with V % n != 0 the last node's
+        slice must absorb the remainder — previously tokens
+        [n*(V//n), V) had only the (1-h)=0 background mass, so the union of
+        node supports missed part of the vocabulary."""
+        ts = TokenStream(vocab_size=103, seq_len=8, batch_per_node=2,
+                         n_nodes=4, heterogeneity=1.0)
+        probs = ts.node_probs()
+        support = (probs > 1e-12).any(axis=0)
+        assert support.all(), np.flatnonzero(~support)
+        # and the remainder went to the LAST node, not nowhere
+        assert (probs[-1][4 * (103 // 4):] > 1e-12).all()
+
+    def test_skew_alpha_overrides_heterogeneity(self):
+        ts = TokenStream(vocab_size=64, seq_len=8, batch_per_node=2,
+                         n_nodes=4, heterogeneity=0.0, skew_alpha=0.05)
+        assert ts.skew_tv() > 0.3
+        iid = TokenStream(vocab_size=64, seq_len=8, batch_per_node=2,
+                          n_nodes=4, heterogeneity=0.0)
+        assert iid.skew_tv() == pytest.approx(0.0)
+
+    def test_skew_tv_monotone_in_alpha(self):
+        tvs = [TokenStream(vocab_size=64, seq_len=8, batch_per_node=2,
+                           n_nodes=4, skew_alpha=a).skew_tv()
+               for a in (0.05, 1.0, 1e3)]
+        assert tvs[0] > tvs[1] > tvs[2]
+
+    def test_stream_samples_respect_skew(self):
+        ts = TokenStream(vocab_size=32, seq_len=64, batch_per_node=8,
+                         n_nodes=2, skew_alpha=0.01, seed=0)
+        batch = next(iter(ts))
+        assert batch["tokens"].shape == (2, 8, 64)
+        probs = ts.node_probs()
+        # each node's empirical support should concentrate where its
+        # sampling distribution does
+        for i in range(2):
+            toks = np.asarray(batch["tokens"][i]).ravel()
+            top = set(np.argsort(probs[i])[-8:].tolist())
+            frac = np.mean([t in top for t in toks])
+            assert frac > 0.5, (i, frac)
+
+
+class TestLogRegSkew:
+    def test_make_logreg_dirichlet_path(self):
+        p = make_logreg("epsilon", 4, m=512, d=32, skew_alpha=0.05)
+        idx = np.asarray(p.node_index)
+        assert idx.shape == (4, 128)
+        assert len(np.unique(idx.ravel())) == idx.size
+        labels = (np.asarray(p.b) > 0).astype(np.int64)
+        assert data_skew_tv(labels, idx) > 0.3
+
+    def test_make_logreg_skew_vs_sorted_exclusive(self):
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            make_logreg("epsilon", 4, m=512, d=32, skew_alpha=1.0,
+                        sorted_assignment=True)
+
+    def test_make_logreg_iid_unchanged(self):
+        a = make_logreg("epsilon", 4, m=512, d=32, seed=0)
+        b = make_logreg("epsilon", 4, m=512, d=32, seed=0)
+        np.testing.assert_array_equal(np.asarray(a.node_index),
+                                      np.asarray(b.node_index))
